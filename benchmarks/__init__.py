@@ -1,0 +1,7 @@
+import os
+import sys
+
+# allow `python -m benchmarks.run` from the repo root without install
+_src = os.path.join(os.path.dirname(__file__), "..", "src")
+if _src not in sys.path:
+    sys.path.insert(0, _src)

@@ -1,0 +1,25 @@
+"""Fig. 10 reproduction: execution-time breakdown (compute / P2P /
+P2P-idle / imbalance-idle) of Data-P vs Model-P, normalized to Data-P."""
+from __future__ import annotations
+
+from benchmarks._timeline import (dp_step_time, lm_models, paper_models,
+                                  pipeline_step_time)
+
+
+def main(fast: bool = True):
+    lines = []
+    for m in paper_models():
+        dp = dp_step_time(m, 4)
+        mp = pipeline_step_time(m, 4)
+        norm = dp["step"]
+        for mode, t in (("dp", dp), ("mp", mp)):
+            parts = ";".join(
+                f"{k}={t[k]/norm:.3f}"
+                for k in ("compute", "p2p", "p2p_idle", "imbalance_idle"))
+            lines.append(f"breakdown/{m.name}/{mode},"
+                         f"{t['step']*1e6:.0f},{parts}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,22 @@
+"""Fig. 4 reproduction: % of training time spent on inter-GPU
+communication under data parallelism (4 GPUs, PCIe)."""
+from __future__ import annotations
+
+from benchmarks._timeline import dp_step_time, lm_models, paper_models
+
+
+def main(fast: bool = True):
+    lines = []
+    pcts = []
+    for m in paper_models() + lm_models():
+        t = dp_step_time(m, 4)
+        pct = 100.0 * (t["p2p"] + t["p2p_idle"]) / t["step"]
+        pcts.append(pct)
+        lines.append(f"comm_time/{m.name},{t['step']*1e6:.0f},"
+                     f"comm_pct={pct:.1f}")
+    lines.append(f"comm_time/mean,0,comm_pct={sum(pcts)/len(pcts):.1f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,12 @@
+"""Reduced-config helper shared by benchmarks (mirror of tests/conftest)."""
+from repro.configs import get_config, smoke_config
+from repro.configs.base import MeshPlan
+
+
+def tiny_cfg(name="granite-8b", *, n_layers=4, pipe=2, tensor=1, ticks=2,
+             **kw):
+    cfg = smoke_config(get_config(name))
+    return cfg.replace(
+        n_layers=n_layers,
+        mesh_plan=MeshPlan(pipe=pipe, tensor=tensor, num_microbatches=ticks),
+        param_dtype="float32", compute_dtype="float32", **kw)

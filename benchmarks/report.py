@@ -1,0 +1,101 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables
+from results/dryrun/cells.jsonl."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun", "cells.jsonl")
+
+
+def load(path=DEFAULT):
+    rows = {}
+    for line in open(path):
+        r = json.loads(line)
+        rows[(r["arch"], r["shape"], r.get("mesh", "?"))] = r
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(rows) -> str:
+    out = ["| arch | shape | mesh | status | compile s | args GB/dev |"
+           " temp GB/dev | HLO GFLOP/dev | wire GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(rows.items()):
+        if r["status"] == "skip":
+            out.append(f"| {a} | {s} | {m} | skip ({r['skip_reason'][:40]}…) "
+                       f"| | | | | |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {a} | {s} | {m} | **FAIL** {r.get('error','')[:60]}"
+                       f" | | | | | |")
+            continue
+        mem = r["memory"]
+        out.append(
+            f"| {a} | {s} | {m} | ok | {r['compile_s']:.0f} "
+            f"| {fmt_bytes(mem['argument_bytes'])} "
+            f"| {fmt_bytes(mem['temp_bytes'])} "
+            f"| {r['cost']['flops']/1e9:.0f} "
+            f"| {fmt_bytes(r['wire_bytes_per_dev'])} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows, mesh="16x16") -> str:
+    out = ["| arch | shape | compute s | memory s | collective s |"
+           " dominant | MODEL_FLOPS | useful | ideal s | **frac** |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(rows.items()):
+        if m != mesh:
+            continue
+        if r["status"] == "skip":
+            out.append(f"| {a} | {s} | — | — | — | skip | | | | |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {a} | {s} | — | — | — | FAIL | | | | |")
+            continue
+        t = r["terms"]
+        out.append(
+            f"| {a} | {s} | {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+            f"| {t['collective_s']:.3f} | {r['dominant'][:-2]} "
+            f"| {r['model_flops']:.2e} | {r['useful_flops_ratio']:.2f} "
+            f"| {r.get('ideal_s', 0):.3f} "
+            f"| **{r['roofline_fraction']:.3f}** |")
+    return "\n".join(out)
+
+
+def summary(rows) -> str:
+    oks = [r for r in rows.values() if r["status"] == "ok"]
+    fails = [r for r in rows.values() if r["status"] == "fail"]
+    skips = [r for r in rows.values() if r["status"] == "skip"]
+    lines = [f"- cells: {len(rows)} total — {len(oks)} compiled, "
+             f"{len(skips)} skipped (per brief), {len(fails)} failed"]
+    if oks:
+        worst = min(oks, key=lambda r: r["roofline_fraction"])
+        best = max(oks, key=lambda r: r["roofline_fraction"])
+        collb = [r for r in oks if r["dominant"] == "collective_s"]
+        lines.append(f"- roofline fraction range: "
+                     f"{worst['roofline_fraction']:.3f} "
+                     f"({worst['arch']}/{worst['shape']}/{worst['mesh']}) "
+                     f"to {best['roofline_fraction']:.3f} "
+                     f"({best['arch']}/{best['shape']}/{best['mesh']})")
+        lines.append(f"- collective-bound cells: "
+                     + ", ".join(f"{r['arch']}/{r['shape']}/{r['mesh']}"
+                                 for r in collb[:8]))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = load(sys.argv[1] if len(sys.argv) > 1 else DEFAULT)
+    print("## Dry-run\n")
+    print(summary(rows))
+    print()
+    print(dryrun_table(rows))
+    print("\n## Roofline (single pod, 16x16 = 256 chips)\n")
+    print(roofline_table(rows, "16x16"))
+    print("\n## Roofline (multi-pod, 2x16x16 = 512 chips)\n")
+    print(roofline_table(rows, "2x16x16"))

@@ -1,0 +1,61 @@
+"""§Roofline: per (arch x shape x mesh) terms from the dry-run artifacts.
+
+Reads results/dryrun/cells.jsonl (produced by
+``python -m repro.launch.dryrun --all --out results/dryrun/cells.jsonl``).
+Each row: the three roofline terms (s), dominant bottleneck, MODEL_FLOPS,
+useful-flops ratio, and the roofline fraction.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun", "cells.jsonl")
+
+
+def load(path: str = DEFAULT):
+    if not os.path.exists(path):
+        return []
+    rows = {}
+    for line in open(path):
+        r = json.loads(line)
+        rows[(r["arch"], r["shape"], r.get("mesh", "?"))] = r
+    return list(rows.values())
+
+
+def main(fast: bool = True, path: str = DEFAULT):
+    rows = load(path)
+    lines = []
+    if not rows:
+        lines.append("roofline/missing,0,"
+                     "run `python -m repro.launch.dryrun --all --out "
+                     "results/dryrun/cells.jsonl` first")
+        return lines
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"],
+                                         r.get("mesh", ""))):
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r.get('mesh','')}"
+        if r["status"] == "skip":
+            lines.append(f"{tag},0,skip={r['skip_reason'][:60]}")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"{tag},0,FAIL={r.get('error','')[:80]}")
+            continue
+        t = r["terms"]
+        step_us = max(t.values()) * 1e6
+        lines.append(
+            f"{tag},{step_us:.0f},"
+            f"compute_s={t['compute_s']:.4f};memory_s={t['memory_s']:.4f};"
+            f"collective_s={t['collective_s']:.4f};dom={r['dominant']};"
+            f"frac={r['roofline_fraction']:.3f};"
+            f"useful={r['useful_flops_ratio']:.2f}")
+    oks = [r for r in rows if r["status"] == "ok"]
+    if oks:
+        fr = [r["roofline_fraction"] for r in oks]
+        lines.append(f"roofline/summary,0,cells={len(rows)};ok={len(oks)};"
+                     f"frac_min={min(fr):.3f};frac_max={max(fr):.3f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,47 @@
+"""Benchmark orchestrator: one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="long training runs for convergence/rmse")
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (breakdown, comm_time, comm_volume, convergence,
+                            kernel_bench, rmse, roofline, throughput)
+    benches = {
+        "comm_volume": comm_volume.main,      # Fig. 3
+        "comm_time": comm_time.main,          # Fig. 4
+        "throughput": throughput.main,        # Fig. 9
+        "breakdown": breakdown.main,          # Fig. 10
+        "rmse": rmse.main,                    # Fig. 8
+        "convergence": convergence.main,      # Fig. 11 / Table 1
+        "kernels": kernel_bench.main,         # Pallas kernels
+        "roofline": roofline.main,            # EXPERIMENTS.md §Roofline
+    }
+    picked = (args.only.split(",") if args.only else list(benches))
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in picked:
+        try:
+            for line in benches[name](fast=not args.full):
+                print(line)
+        except Exception:
+            failures += 1
+            print(f"{name}/ERROR,0,exception")
+            traceback.print_exc(file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,56 @@
+"""Quickstart: the paper's technique in ~40 lines of library API.
+
+Builds a small pipelined LM, trains it with the async streaming pipeline
+under SpecTrain weight prediction, and compares against vanilla stale
+pipelining — the paper's core claim, reproduced in a minute on CPU.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import get_config, smoke_config
+from repro.configs.base import MeshPlan
+from repro.core import pipeline_stream
+from repro.data import DataConfig, SyntheticLM
+from repro.models import Model
+
+
+def train(mode: str, steps: int = 120):
+    # a 4-layer, 4-stage pipelined llama-style model (reduced dims)
+    cfg = smoke_config(get_config("granite-8b")).replace(
+        n_layers=4,
+        mesh_plan=MeshPlan(pipe=4, tensor=1),
+        param_dtype="float32", compute_dtype="float32")
+    model = Model(cfg)
+
+    data = SyntheticLM(DataConfig(cfg.vocab_size, seq_len=16,
+                                  global_batch=8, seed=0))
+    sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                       data.batch_at(0))
+
+    state = pipeline_stream.init_state(model, jax.random.PRNGKey(0), sds,
+                                       mode=mode)
+    step = jax.jit(pipeline_stream.make_train_step(
+        model, mode=mode, lr=0.08))
+
+    losses = []
+    for s in range(steps):
+        state, metrics = step(state, data.batch_at(s))
+        if float(metrics["loss_valid"]):
+            losses.append(float(metrics["loss"]))
+    return losses, data.optimal_loss()
+
+
+if __name__ == "__main__":
+    print("training a 4-stage async pipeline (PipeDream-style), 3 ways:\n")
+    for mode in ("vanilla", "pipedream", "spectrain"):
+        losses, floor = train(mode)
+        print(f"  {mode:10s} first={losses[0]:.3f} "
+              f"final={sum(losses[-20:])/20:.3f}  (bigram floor {floor:.3f})")
+    print("\nSpecTrain (weight prediction, Eq. 4) recovers the loss the "
+          "stale\npipeline gives up — the paper's Fig. 11 in miniature.")

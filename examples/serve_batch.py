@@ -1,0 +1,17 @@
+"""Batched serving example: prefill + decode with a KV cache, across
+architecture families (attention / MLA / RWKV / hybrid)."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+if __name__ == "__main__":
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    for arch in ("granite-8b", "minicpm3-4b", "rwkv6-7b", "zamba2-1.2b"):
+        print(f"=== {arch} ===")
+        subprocess.check_call(
+            [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+             "--batch", "2", "--prompt-len", "16", "--gen", "16"],
+            env=env)

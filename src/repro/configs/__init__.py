@@ -1,0 +1,11 @@
+from repro.configs.base import (  # noqa: F401
+    ArchConfig, MeshPlan, MLAConfig, MoEConfig, SSMConfig, ShapeConfig,
+    SHAPES, get_config, list_archs, register, shape_applicable, smoke_config,
+)
+
+# import all arch modules so the registry is always populated
+from repro.configs import (  # noqa: F401
+    whisper_base, pixtral_12b, granite_8b, granite_20b, starcoder2_15b,
+    minicpm3_4b, grok_1_314b, deepseek_moe_16b, rwkv6_7b, zamba2_1_2b,
+    paper_models,
+)

@@ -1,0 +1,290 @@
+"""Async streaming pipeline — the paper's PipeDream-style runtime.
+
+One ``train_step`` call = one pipeline **tick**.  Every stage performs one
+forward (of the microbatch injected ``k`` ticks ago) and one backward (of
+the microbatch injected ``2(S−1)−k`` ticks ago) per tick; in-flight
+activations/cotangents live in ring buffers carried across steps inside
+the train state.  Each stage applies its own gradient the tick its
+backward completes — per-minibatch, per-stage weight updates, i.e. exactly
+the staleness structure of §3.1.  After the 2(S−1)-tick warm-up there is
+**zero bubble**.
+
+Weight-handling modes (§3.2 / Fig. 7):
+
+  vanilla    fwd & bwd use current weights            (stale, inconsistent)
+  pipedream  fwd uses current, bwd the stashed fwd weights (stale, consistent)
+  spectrain  fwd uses Ŵ = W − s_fwd·η·v (Eq. 4 with s_fwd = 2(S−1−k));
+             bwd uses current weights (s_bwd = 0 → already the target)
+
+Gradient synchronization over the `data` (and `pod`) mesh axes is inserted
+by GSPMD from the sharding specs — synchronous DP across replicas, async
+across pipeline stages, exactly the paper's hybrid.
+
+Backward uses stored stage *inputs* plus recompute (remat), so the rings
+hold one activation tensor per (stage, in-flight microbatch) — the same
+memory PipeDream's activation stashing pays, and ~L× less than storing
+residuals.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spectrain as st
+from repro.models.layers import shard_act
+from repro.optim import sgd
+
+MODES = ("vanilla", "pipedream", "spectrain")
+
+
+def _ring_write(ring, idx, val):
+    """ring leaves [R, ...]; write val at slot idx (traced scalar)."""
+    return jax.tree.map(
+        lambda r, v: jax.lax.dynamic_update_index_in_dim(
+            r, v.astype(r.dtype), idx, 0), ring, val)
+
+
+def _ring_read(ring, idx):
+    return jax.tree.map(
+        lambda r: jax.lax.dynamic_index_in_dim(r, idx, 0, keepdims=False),
+        ring)
+
+
+def _per_stage_gather(ring, idx_vec):
+    """ring leaves [S, R, ...]; gather slot idx_vec[k] for each stage k."""
+    def leaf(r):
+        return jax.vmap(
+            lambda rk, i: jax.lax.dynamic_index_in_dim(rk, i, 0, False)
+        )(r, idx_vec)
+    return jax.tree.map(leaf, ring)
+
+
+def _stash_weights(w_stash, stages, slot):
+    """w_stash leaves [S, R, ...]; write current stage weights at slot."""
+    return jax.tree.map(
+        lambda r, w: jax.lax.dynamic_update_index_in_dim(
+            r, w.astype(r.dtype), slot, 1), w_stash, stages)
+
+
+def make_state(model, params, batch_sds, *, mode: str = "spectrain",
+               ticks_per_step: int = 1,
+               fused_predict: bool = False) -> Dict[str, Any]:
+    """Streaming train state: params + momentum + in-flight rings.
+
+    ``ticks_per_step``: the global batch is split into this many per-tick
+    minibatches; one train_step runs that many ticks via lax.scan (the
+    paper injects one minibatch per time unit).
+
+    ``fused_predict``: store the next tick's predicted weights (bf16),
+    computed inside the update pass (the kernels/fused_update schedule):
+    identical math, but the prediction costs no extra HBM pass and the
+    forward reads 2-byte weights."""
+    cfg = model.cfg
+    S = model.n_stages
+    state: Dict[str, Any] = {
+        "params": params,
+        "momentum": sgd.init(params).v,
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if S == 1:
+        return state
+    if fused_predict and mode == "spectrain":
+        cdt = jnp.dtype(cfg.compute_dtype)
+        state["pred"] = {
+            "outer": jax.tree.map(lambda p: p.astype(cdt), params["outer"]),
+            "stages": jax.tree.map(lambda p: p.astype(cdt),
+                                   params["stages"]),
+        }
+    R = 2 * S - 1
+    tok_sds = batch_sds["tokens"]
+    B, seq = tok_sds.shape[0], tok_sds.shape[1]
+    assert B % ticks_per_step == 0, (B, ticks_per_step)
+    mb = B // ticks_per_step
+    d = cfg.d_model
+    cdt = jnp.dtype(cfg.compute_dtype)
+    state.update({
+        "tick": jnp.zeros((), jnp.int32),
+        "fwd_buf": jnp.zeros((S, mb, seq, d), cdt),
+        "bwd_buf": jnp.zeros((S, mb, seq, d), cdt),
+        "stash_x": jnp.zeros((S, R, mb, seq, d), cdt),
+        "batch_ring": jax.tree.map(
+            lambda s: jnp.zeros((R, mb) + tuple(s.shape[1:]), s.dtype),
+            batch_sds),
+    })
+    if mode == "pipedream":
+        state["w_stash"] = jax.tree.map(
+            lambda p: jnp.broadcast_to(
+                p[:, None], (p.shape[0], R) + p.shape[1:]),
+            params["stages"])
+    return state
+
+
+def init_state(model, key, batch_sds, *, mode: str = "spectrain",
+               ticks_per_step: int = 1):
+    return make_state(model, model.init(key), batch_sds, mode=mode,
+                      ticks_per_step=ticks_per_step)
+
+
+def make_train_step(model, *, mode: str = "spectrain", lr: float,
+                    gamma: float = 0.9, clip: Optional[float] = None,
+                    ticks_per_step: int = 1, fused_predict: bool = False,
+                    bwd_dtype: Optional[str] = None) -> Callable:
+    """``fused_predict``: prediction computed inside the update pass and
+    stored bf16 (see make_state) — same math, one less weight pass/tick.
+    ``bwd_dtype``: linearize the backward at weights cast to this dtype
+    (e.g. "bfloat16") — gradients and their data-axis all-reduce then move
+    half the bytes (standard mixed-precision training)."""
+    assert mode in MODES, mode
+    fused_predict = fused_predict and mode == "spectrain"
+    S = model.n_stages
+    R = 2 * S - 1
+    g_vec = jnp.array([2 * (S - 1 - k) for k in range(S)], jnp.int32)
+    s_fwd = jnp.array([st.version_difference_stream(k, S, "forward")
+                       for k in range(S)], jnp.float32)
+
+    def stage_fn(sp, xk):
+        xk, aux = model.stage_apply(sp, (xk, jnp.zeros((), jnp.float32)))
+        return xk, aux
+
+    def vstages(sp, xs):
+        return jax.vmap(stage_fn)(sp, xs)
+
+    # ------------------------------------------------------------- S == 1
+    def step_degenerate(state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch))(state["params"])
+        if clip:
+            grads, _ = sgd.clip_by_global_norm(grads, clip)
+        params, mom = sgd.update(state["params"],
+                                 sgd.MomentumState(state["momentum"]),
+                                 grads, lr=lr, gamma=gamma)
+        return ({**state, "params": params, "momentum": mom.v,
+                 "step": state["step"] + 1},
+                {"loss": loss, "loss_valid": jnp.ones((), jnp.float32)})
+
+    if S == 1:
+        return step_degenerate
+
+    # ------------------------------------------------------------- S > 1
+    def tick_fn(state: Dict[str, Any], batch):
+        t = state["tick"]
+        params, mom = state["params"], state["momentum"]
+        outer, stages = params["outer"], params["stages"]
+        mom_outer, mom_stages = mom["outer"], mom["stages"]
+
+        # ---------- forward weights (Eq. 4) ------------------------------
+        if fused_predict:
+            # prediction was produced by the previous tick's update pass
+            stages_f = state["pred"]["stages"]
+            outer_embed_f = state["pred"]["outer"]
+        elif mode == "spectrain":
+            stages_f = st.predict_weights_stacked(stages, mom_stages,
+                                                  lr, s_fwd)
+            outer_embed_f = st.predict_weights(outer, mom_outer, lr,
+                                               float(2 * (S - 1)))
+        else:
+            stages_f, outer_embed_f = stages, outer
+
+        # ---------- inject + forward all stages --------------------------
+        x_new = model.embed(outer_embed_f, batch)
+        A = state["fwd_buf"].at[0].set(x_new)
+        A = shard_act(A, "stage", "act_batch", None, None)
+        out, _ = vstages(stages_f, A)
+
+        slot = jnp.mod(t, R)
+        stash = jax.lax.dynamic_update_index_in_dim(
+            state["stash_x"], A, slot, 1)
+        batch_ring = _ring_write(state["batch_ring"], slot, batch)
+
+        # ---------- head loss at the last stage ---------------------------
+        karange = jnp.arange(S)
+        valid_head = (t >= (S - 1)).astype(jnp.float32)
+        tgt = _ring_read(batch_ring, jnp.mod(t - (S - 1), R))["targets"]
+
+        loss, head_vjp = jax.vjp(
+            lambda outer_, xlast: model.head_loss(outer_, xlast, tgt),
+            outer, out[S - 1])
+        g_outer_head, cot_last = head_vjp(valid_head)
+
+        # ---------- backward all stages ------------------------------------
+        valid_b = ((t - 2 * (S - 1) + karange) >= 0)
+        B_cot = state["bwd_buf"].at[S - 1].set(cot_last)
+        B_cot = B_cot * valid_b[:, None, None, None].astype(B_cot.dtype)
+        idx = jnp.mod(t - g_vec, R)
+        X_b = _per_stage_gather(stash, idx)
+        aux_cot = valid_b.astype(jnp.float32)
+
+        if mode == "pipedream":
+            stages_b = _per_stage_gather(state["w_stash"], idx)
+        else:
+            stages_b = stages
+        if bwd_dtype is not None:
+            bdt = jnp.dtype(bwd_dtype)
+            stages_b = jax.tree.map(lambda p: p.astype(bdt), stages_b)
+        _, bwd_vjp = jax.vjp(vstages, stages_b, X_b)
+        gW, gX = bwd_vjp((B_cot, aux_cot))
+
+        # ---------- embed backward -----------------------------------------
+        old_batch = _ring_read(batch_ring, jnp.mod(t - 2 * (S - 1), R))
+        _, evjp = jax.vjp(lambda o: model.embed(o, old_batch), outer)
+        (g_outer_embed,) = evjp(gX[0] * valid_b[0].astype(gX.dtype))
+
+        g_outer = jax.tree.map(jnp.add, g_outer_head, g_outer_embed)
+        grads = {"outer": g_outer, "stages": gW}
+        if clip:
+            grads, _ = sgd.clip_by_global_norm(grads, clip)
+
+        # ---------- per-tick, per-stage update ------------------------------
+        new_params, new_mom = sgd.update(
+            params, sgd.MomentumState(mom), grads, lr=lr, gamma=gamma)
+        new_pred = None
+        if fused_predict:
+            # Eq. 4 evaluated inside the update pass (the fused_update
+            # kernel's schedule): for tick t+1, Ŵ = W_{t+1} − s·η·v_t.
+            cdt = jnp.dtype(model.cfg.compute_dtype)
+            new_pred = {
+                "stages": jax.tree.map(
+                    lambda p: p.astype(cdt),
+                    st.predict_weights_stacked(
+                        new_params["stages"], new_mom.v["stages"],
+                        lr, s_fwd)),
+                "outer": jax.tree.map(
+                    lambda p: p.astype(cdt),
+                    st.predict_weights(new_params["outer"],
+                                       new_mom.v["outer"], lr,
+                                       float(2 * (S - 1)))),
+            }
+
+        # ---------- rotate in-flight buffers --------------------------------
+        A_next = jnp.roll(out, 1, axis=0)
+        B_next = jnp.roll(gX, -1, axis=0)
+
+        new_state = {
+            **state,
+            "params": new_params, "momentum": new_mom.v,
+            "step": state["step"] + 1, "tick": t + 1,
+            "fwd_buf": A_next, "bwd_buf": B_next,
+            "stash_x": stash, "batch_ring": batch_ring,
+        }
+        if mode == "pipedream":
+            new_state["w_stash"] = _stash_weights(
+                state["w_stash"], stages, slot)
+        if new_pred is not None:
+            new_state["pred"] = new_pred
+        return new_state, {"loss": loss, "loss_valid": valid_head}
+
+    if ticks_per_step == 1:
+        return tick_fn
+
+    def train_step(state: Dict[str, Any], batch):
+        T = ticks_per_step
+        mbs = jax.tree.map(
+            lambda x: x.reshape((T, x.shape[0] // T) + x.shape[1:]), batch)
+        state, mets = jax.lax.scan(tick_fn, state, mbs)
+        n = jnp.maximum(jnp.sum(mets["loss_valid"]), 1.0)
+        return state, {"loss": jnp.sum(mets["loss"] * mets["loss_valid"]) / n,
+                       "loss_valid": n}
+
+    return train_step

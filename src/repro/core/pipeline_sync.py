@@ -1,0 +1,97 @@
+"""Synchronous circular pipeline (GPipe semantics) — staleness-free baseline.
+
+Stage weights are stacked on a leading `stage` axis (sharded over the
+`pipe` mesh axis); microbatches rotate through the stage buffer with
+``jnp.roll`` (lowers to collective-permute on a sharded axis); autodiff
+through the tick scan produces the reverse pipeline.  Weight update is one
+synchronous momentum-SGD step per global batch — identical semantics to
+data parallelism, which is why it doubles as the staleness-free reference
+in every convergence test.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import shard_act, softmax_xent
+from repro.optim import sgd
+
+
+def pipeline_loss(model, params, batch, num_microbatches: int) -> jnp.ndarray:
+    """Forward loss through the circular pipeline."""
+    cfg = model.cfg
+    S = model.n_stages
+    if S == 1:
+        return model.loss(params, batch)
+    M = num_microbatches
+    outer, stages = params["outer"], params["stages"]
+
+    x = model.embed(outer, batch)                    # [B, s, d]
+    B = x.shape[0]
+    assert B % M == 0, (B, M)
+    mb = B // M
+    xs = x.reshape((M, mb) + x.shape[1:])
+    T = M + S - 1
+
+    state = jnp.zeros((S, mb) + x.shape[1:], x.dtype)
+    state = shard_act(state, "stage", "act_batch", None, None)
+
+    def stage_fn(sp, xk):
+        (xk, aux) = model.stage_apply(sp, (xk, jnp.zeros((), jnp.float32)))
+        return xk, aux
+
+    karange = jnp.arange(S)
+
+    def tick(carry, t):
+        prev_out, aux_sum = carry
+        x_t = jax.lax.dynamic_index_in_dim(
+            xs, jnp.clip(t, 0, M - 1), 0, keepdims=False)
+        ins = jnp.roll(prev_out, 1, axis=0).at[0].set(x_t)
+        ins = shard_act(ins, "stage", "act_batch", None, None)
+        out, aux_vec = jax.vmap(stage_fn)(stages, ins)
+        valid = ((t - karange) >= 0) & ((t - karange) < M)
+        aux_sum = aux_sum + jnp.sum(aux_vec * valid)
+        return (out, aux_sum), out[-1]
+
+    init = (state, jnp.zeros((), jnp.float32))
+    (_, aux_sum), ys = jax.lax.scan(tick, init, jnp.arange(T))
+    # drained outputs: ticks S-1 .. T-1 hold microbatches 0..M-1
+    outs = ys[S - 1:]                                # [M, mb, s, d]
+    outs = outs.reshape((B,) + outs.shape[2:])
+    loss = model.head_loss(outer, outs, batch["targets"])
+    return loss + aux_sum / M
+
+
+def make_train_step(model, *, lr: float, gamma: float = 0.9,
+                    num_microbatches: Optional[int] = None,
+                    clip: Optional[float] = None) -> Callable:
+    """Synchronous pipelined train step (params+momentum in state)."""
+    M = num_microbatches or model.cfg.mesh_plan.num_microbatches
+
+    def loss_fn(params, batch):
+        return pipeline_loss(model, params, batch, M)
+
+    def train_step(state: Dict[str, Any], batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        gnorm = None
+        if clip:
+            grads, gnorm = sgd.clip_by_global_norm(grads, clip)
+        params, mom = sgd.update(state["params"],
+                                 sgd.MomentumState(state["momentum"]),
+                                 grads, lr=lr, gamma=gamma)
+        new_state = {"params": params, "momentum": mom.v,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss}
+        if gnorm is not None:
+            metrics["grad_norm"] = gnorm
+        return new_state, metrics
+
+    return train_step
+
+
+def init_state(model, key) -> Dict[str, Any]:
+    params = model.init(key)
+    return {"params": params, "momentum": sgd.init(params).v,
+            "step": jnp.zeros((), jnp.int32)}

@@ -1,0 +1,254 @@
+"""Paper-exact pipelined-training simulator (Fig. 7 semantics).
+
+Reproduces the *algorithmic* behaviour of the paper's 4 schemes on one
+process, version-for-version:
+
+  * ``sync``       — staleness-free reference (Data-P / single-GPU).
+  * ``vanilla``    — pipelined, stale + inconsistent weights (Fig. 7b).
+  * ``pipedream``  — weight stashing: bwd reuses the fwd weights (Fig. 7c).
+  * ``spectrain``  — weight prediction, Eqs. (4)–(6) (Fig. 7d).
+
+Timeline model (§3.1): the global weight version t advances once per time
+unit; minibatch i reads stage-k forward weights at version
+
+    v_f(i,k) = i + ⌈k/2⌉                (= t_c − s_fwd, Eq. 5)
+
+and stage-k backward weights at
+
+    v_b(i,k) = i + N − 1 − ⌊k/2⌋        (= t_c − s_bwd, Eq. 6)
+
+with its round trip completing at t_c = i + N − 1, where its gradient is
+applied (momentum SGD) producing version t_c + 1.  Processing minibatches
+in order therefore only ever references versions that already exist.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spectrain as st
+from repro.optim import sgd
+
+
+@dataclass
+class StagedFns:
+    """A model split into N sequential stages.
+
+    params layout: {"outer": {"in": ..., "out": ...}, "stages": [N pytrees]}
+    ``embed`` consumes outer["in"], ``head_loss`` consumes outer["out"].
+    """
+    embed: Callable[[Any, Any], jnp.ndarray]
+    stage: Callable[[Any, jnp.ndarray], jnp.ndarray]
+    head_loss: Callable[[Any, jnp.ndarray, Any], jnp.ndarray]
+
+
+class Simulator:
+    SCHEMES = ("sync", "vanilla", "pipedream", "spectrain")
+
+    def __init__(self, fns: StagedFns, params, *, n_stages: int,
+                 scheme: str = "spectrain", lr: float = 1e-2,
+                 gamma: float = 0.9, clip: Optional[float] = None,
+                 rmse_s: Sequence[int] = ()):
+        assert scheme in self.SCHEMES, scheme
+        self.fns = fns
+        self.N = n_stages
+        self.scheme = scheme
+        self.lr = lr
+        self.gamma = gamma
+        self.clip = clip
+        self.rmse_s = tuple(rmse_s)
+
+        self.hist: Dict[int, Any] = {0: params}
+        self.mhist: Dict[int, Any] = {0: sgd.init(params).v}
+        self.latest = 0
+        self.i = 0  # next minibatch index
+
+        self._stage_fwd = jax.jit(fns.stage)
+        self._embed = jax.jit(fns.embed)
+
+        def stage_bwd(w, x, cot):
+            _, vjp = jax.vjp(fns.stage, w, x)
+            return vjp(cot)
+        self._stage_bwd = jax.jit(stage_bwd)
+
+        def head_fwd_bwd(w, x, batch):
+            (loss, vjp) = jax.vjp(lambda w_, x_: fns.head_loss(w_, x_, batch),
+                                  w, x)
+            gw, gx = vjp(jnp.ones((), loss.dtype))
+            return loss, gw, gx
+        self._head = jax.jit(head_fwd_bwd)
+
+        def embed_bwd(w, batch, cot):
+            _, vjp = jax.vjp(lambda w_: fns.embed(w_, batch), w)
+            return vjp(cot)[0]
+        self._embed_bwd = jax.jit(embed_bwd)
+
+        self._predict = jax.jit(st.predict_weights)
+
+    # ------------------------------------------------------------------ utils
+    def _ensure(self, t: int):
+        while self.latest < t:
+            self.latest += 1
+            self.hist[self.latest] = self.hist[self.latest - 1]
+            self.mhist[self.latest] = self.mhist[self.latest - 1]
+
+    def _gc(self, keep_from: int):
+        for t in [t for t in self.hist if t < keep_from]:
+            del self.hist[t]
+            del self.mhist[t]
+
+    def _weights_at(self, v: int, target: int, predicted: bool):
+        """Full param pytree the scheme exposes at read-version v."""
+        w = self.hist[v]
+        if not predicted:
+            return w
+        s = target - v
+        if s <= 0:
+            return w
+        return self._predict(w, self.mhist[v], self.lr, s)
+
+    # ------------------------------------------------------------------ step
+    def step(self, batch) -> Dict[str, Any]:
+        N, i, scheme = self.N, self.i, self.scheme
+        if scheme == "sync":
+            t_c = self.latest
+            v_f = [t_c] * N
+            v_b = [t_c] * N
+        else:
+            t_c = i + N - 1
+            self._ensure(t_c)
+            v_f = [i + (k + 1) // 2 for k in range(N)]
+            v_b = [i + N - 1 - k // 2 for k in range(N)]
+        predicted = scheme == "spectrain"
+
+        # ---- forward ----------------------------------------------------
+        stage_w_f = [self._weights_at(v_f[k], t_c, predicted)["stages"][k]
+                     for k in range(N)]
+        outer_f0 = self._weights_at(v_f[0], t_c, predicted)["outer"]
+        x = self._embed(outer_f0["in"], batch)
+        xs_in: List[jnp.ndarray] = []
+        for k in range(N):
+            xs_in.append(x)
+            x = self._stage_fwd(stage_w_f[k], x)
+
+        # ---- backward ----------------------------------------------------
+        def bwd_weights(k):
+            if scheme == "pipedream":   # stashing: reuse the fwd weights
+                return self._weights_at(v_f[k], t_c, False)
+            return self._weights_at(v_b[k], t_c, predicted)
+
+        outer_bN = bwd_weights(N - 1)["outer"]
+        loss, g_out, cot = self._head(outer_bN["out"], x, batch)
+        grads_stages: List[Any] = [None] * N
+        for k in reversed(range(N)):
+            gw, cot = self._stage_bwd(bwd_weights(k)["stages"][k],
+                                      xs_in[k], cot)
+            grads_stages[k] = gw
+        g_in = self._embed_bwd(bwd_weights(0)["outer"]["in"], batch, cot)
+        grads = {"outer": {"in": g_in, "out": g_out}, "stages": grads_stages}
+
+        # ---- update (producing version t_c + 1) ---------------------------
+        if self.clip:
+            grads, _ = sgd.clip_by_global_norm(grads, self.clip)
+        base = self.hist[t_c]
+        new_p, new_m = sgd.update(base, sgd.MomentumState(self.mhist[t_c]),
+                                  grads, lr=self.lr, gamma=self.gamma)
+        self.hist[t_c + 1] = new_p
+        self.mhist[t_c + 1] = new_m.v
+        self.latest = t_c + 1
+
+        metrics: Dict[str, Any] = {"loss": float(loss), "version": t_c + 1}
+
+        # ---- Fig. 8: prediction-vs-stale RMSE on the actual trajectory ----
+        for s in self.rmse_s:
+            v0 = t_c + 1 - s
+            if v0 in self.hist:
+                pred = self._predict(self.hist[v0], self.mhist[v0],
+                                     self.lr, s)
+                metrics[f"rmse_pred_s{s}"] = float(st.rmse(pred, new_p))
+                metrics[f"rmse_stale_s{s}"] = float(
+                    st.rmse(self.hist[v0], new_p))
+
+        self._gc(t_c + 1 - max(2 * N, max(self.rmse_s or (0,)) + 1))
+        self.i += 1
+        return metrics
+
+    # ------------------------------------------------------------------
+    @property
+    def params(self):
+        return self.hist[self.latest]
+
+
+# ===========================================================================
+# small staged models for tests / convergence benchmarks
+# ===========================================================================
+
+
+def make_mlp_staged(key, *, in_dim: int, width: int, depth: int,
+                    n_classes: int, n_stages: int
+                    ) -> Tuple[StagedFns, Any]:
+    """SNN-style stacked-FC model split into ``n_stages`` equal stages."""
+    assert depth % n_stages == 0
+    lps = depth // n_stages
+    keys = jax.random.split(key, depth + 2)
+
+    def dense(k, fan_in, fan_out):
+        w = jax.random.normal(k, (fan_in, fan_out)) / jnp.sqrt(fan_in)
+        return {"w": w, "b": jnp.zeros((fan_out,))}
+
+    params = {
+        "outer": {"in": dense(keys[0], in_dim, width),
+                  "out": dense(keys[1], width, n_classes)},
+        "stages": [
+            {"layers": [dense(keys[2 + s * lps + j], width, width)
+                        for j in range(lps)]}
+            for s in range(n_stages)],
+    }
+
+    def embed(w, batch):
+        return jax.nn.selu(batch["x"] @ w["w"] + w["b"])
+
+    def stage(sp, x):
+        for lw in sp["layers"]:
+            x = jax.nn.selu(x @ lw["w"] + lw["b"])
+        return x
+
+    def head_loss(w, x, batch):
+        logits = x @ w["w"] + w["b"]
+        lse = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, batch["y"][:, None], -1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    return StagedFns(embed, stage, head_loss), params
+
+
+def staged_from_model(model) -> Tuple[StagedFns, Callable[[Any], Any]]:
+    """Adapt a repro.models.Model into StagedFns.
+
+    Returns (fns, repack) where ``repack(model_params)`` produces the
+    simulator param layout.
+    """
+    from repro.models.model import tree_slice
+
+    def repack(params):
+        return {
+            "outer": {"in": params["outer"], "out": params["outer"]},
+            "stages": [tree_slice(params["stages"], s)
+                       for s in range(model.n_stages)],
+        }
+
+    def embed(outer_in, batch):
+        return model.embed(outer_in, batch)
+
+    def stage(sp, x):
+        (x, _aux) = model.stage_apply(sp, (x, jnp.zeros((), jnp.float32)))
+        return x
+
+    def head_loss(outer_out, x, batch):
+        return model.head_loss(outer_out, x, batch["targets"])
+
+    return StagedFns(embed, stage, head_loss), repack

@@ -1,0 +1,100 @@
+"""SpecTrain: weight prediction via momentum-smoothed gradients (paper §3.2).
+
+Equations implemented verbatim:
+
+  (1)  v_t = γ·v_{t−1} + (1−γ)·g_t                     (smoothed gradient)
+  (2)  W_{t+1} = W_t − η·g_t                            (SGD step)
+  (3)  Ŵ_{t+1} = W_t − η·v_{t−1}                        (one-step prediction)
+  (4)  Ŵ_{t+s} = W_t − s·η·v_{t−1}                      (s-step prediction)
+  (5)  s_fwd  = ⌊k/2⌋ + N − k − 1                       (round-robin schedule)
+  (6)  s_bwd  = ⌊k/2⌋
+
+The streaming tick schedule (core/pipeline_stream.py) has its own version
+differences, derived the same way (s = #updates between the weight read and
+the minibatch's own update landing):
+
+       s_fwd = 2·(N − 1 − k),   s_bwd = 0
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# version differences
+
+
+def version_difference_paper(stage: int, n_stages: int, phase: str) -> int:
+    """Eqs. (5)/(6) — the paper's round-robin 1F1B schedule."""
+    k, n = stage, n_stages
+    if not 0 <= k < n:
+        raise ValueError(f"stage {k} out of range for {n} stages")
+    if phase == "forward":
+        return k // 2 + n - k - 1
+    if phase == "backward":
+        return k // 2
+    raise ValueError(phase)
+
+
+def version_difference_stream(stage: int, n_stages: int, phase: str) -> int:
+    """The streaming-tick schedule (one 1F+1B wave per train_step)."""
+    k, n = stage, n_stages
+    if not 0 <= k < n:
+        raise ValueError(f"stage {k} out of range for {n} stages")
+    if phase == "forward":
+        return 2 * (n - 1 - k)
+    if phase == "backward":
+        return 0
+    raise ValueError(phase)
+
+
+# ---------------------------------------------------------------------------
+# prediction
+
+
+def predict_weights(params: Any, momentum: Any, lr, s) -> Any:
+    """Eq. (4): Ŵ_{t+s} = W_t − s·η·v_{t−1}   (pytree-wise).
+
+    ``s`` may be a python int or a traced scalar (per-stage vectors are
+    handled by the pipeline runtimes which vmap/index this)."""
+    s = jnp.asarray(s, jnp.float32)
+    lr = jnp.asarray(lr, jnp.float32)
+
+    def leaf(w, v):
+        return (w.astype(jnp.float32) - s * lr * v.astype(jnp.float32)
+                ).astype(w.dtype)
+
+    return jax.tree.map(leaf, params, momentum)
+
+
+def predict_weights_stacked(params: Any, momentum: Any, lr, s_per_stage):
+    """Per-stage prediction for stage-stacked params.
+
+    Every leaf of ``params`` has a leading [n_stages] axis; ``s_per_stage``
+    is an int vector [n_stages].  Broadcasts s along the stage axis.
+    """
+    s = jnp.asarray(s_per_stage, jnp.float32)
+    lr = jnp.asarray(lr, jnp.float32)
+
+    def leaf(w, v):
+        sb = s.reshape((-1,) + (1,) * (w.ndim - 1))
+        return (w.astype(jnp.float32) - sb * lr * v.astype(jnp.float32)
+                ).astype(w.dtype)
+
+    return jax.tree.map(leaf, params, momentum)
+
+
+# ---------------------------------------------------------------------------
+# prediction-error metrics (Fig. 8)
+
+
+def rmse(a: Any, b: Any) -> jnp.ndarray:
+    """Root-mean-square error between two pytrees (global, fp32)."""
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)
+                                - y.astype(jnp.float32)))
+             for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+    n = sum(x.size for x in jax.tree.leaves(a))
+    return jnp.sqrt(sq / n)

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: [b,h,sq,d]; k,v: [b,hkv,sk,d] (GQA: h % hkv == 0).  fp32 softmax."""
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    scale = scale or (1.0 / jnp.sqrt(d).astype(jnp.float32))
+    qg = q.reshape(b, hkv, g, sq, d)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, k.shape[2]), bool),
+                        k.shape[2] - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v)
+    return o.reshape(b, h, sq, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv recurrence (time-major chunk-free scan)
+
+
+def rwkv6_ref(r, k, v, w, u, S0):
+    """r,k,v,w: [b,h,s,hd]; u: [h,hd]; S0: [b,h,hd,hd] (fp32).
+    Returns (y [b,h,s,hd] fp32, S_T fp32)."""
+    f32 = jnp.float32
+    r, k, v, w = (t.astype(f32) for t in (r, k, v, w))
+    u = u.astype(f32)
+
+    def step(S, rkvw):
+        rt, kt, vt, wt = rkvw                       # [b,h,hd]
+        kv = kt[..., :, None] * vt[..., None, :]    # [b,h,hd,hd]
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + u[..., :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (r, k, v, w))
+    S_T, ys = jax.lax.scan(step, S0.astype(f32), xs)
+    return jnp.moveaxis(ys, 0, 2), S_T
+
+
+# ---------------------------------------------------------------------------
+# mamba2 ssd recurrence
+
+
+def mamba2_ref(x, dt, decay, B, C, S0):
+    """x: [b,h,s,p]; dt,decay: [b,h,s]; B,C: [b,h,s,n]; S0: [b,h,p,n] fp32.
+    Returns (y [b,h,s,p] fp32, S_T)."""
+    f32 = jnp.float32
+    x, dt, decay, B, C = (t.astype(f32) for t in (x, dt, decay, B, C))
+
+    def step(S, inp):
+        x_t, dt_t, de_t, B_t, C_t = inp
+        S = S * de_t[..., None, None] + \
+            (dt_t[..., None] * x_t)[..., :, None] * B_t[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", S, C_t)
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (x, dt, decay, B, C))
+    S_T, ys = jax.lax.scan(step, S0.astype(f32), xs)
+    return jnp.moveaxis(ys, 0, 2), S_T
+
+
+# ---------------------------------------------------------------------------
+# fused momentum update + SpecTrain prediction
+
+
+def fused_update_ref(w, v, g, *, lr, gamma, s):
+    """Momentum-SGD update (Eq. 1/2) + weight prediction (Eq. 4), fused.
+
+    Returns (w', v', ŵ) where
+      v' = γ·v + (1−γ)·g
+      w' = w − η·v'
+      ŵ  = w' − s·η·v'        (prediction for s steps ahead of w')
+    """
+    f32 = jnp.float32
+    vf = gamma * v.astype(f32) + (1.0 - gamma) * g.astype(f32)
+    wf = w.astype(f32) - lr * vf
+    what = wf - s * lr * vf
+    return wf.astype(w.dtype), vf, what.astype(w.dtype)

@@ -1,0 +1,385 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must run before ANY jax import — jax locks device count on first init.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (SHAPES, get_config, list_archs,  # noqa: E402
+                           shape_applicable, smoke_config)
+from repro.configs.base import MeshPlan  # noqa: E402
+from repro.core import pipeline_stream, pipeline_sync  # noqa: E402
+from repro.launch.mesh import make_production_mesh, make_smoke_mesh  # noqa: E402
+from repro.models import Model, input_specs  # noqa: E402
+from repro.models.layers import use_rules  # noqa: E402
+from repro.models.model import cache_axes  # noqa: E402
+from repro.runtime import sharding as sh  # noqa: E402
+from repro.runtime.hlo_cost import analyze as hlo_analyze  # noqa: E402
+from repro.runtime.mesh_utils import axis_sizes, refine_mesh  # noqa: E402
+
+# TPU v5e-class hardware constants (per chip)
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+                "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+                "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str) -> Dict[str, Any]:
+    """Per-device collective inventory from compiled HLO text.
+
+    Returns counts, result bytes, and ring-model wire-bytes per op kind.
+    """
+    out: Dict[str, Any] = {}
+    wire_total = 0.0
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        res_txt, op = m.groups()
+        op = op.replace("-start", "")
+        rbytes = _shape_bytes(res_txt)
+        # group size n
+        n = None
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            g2 = _GROUPS_IOTA_RE.search(line)
+            if g2:
+                n = int(g2.group(2))
+        n = n or 2
+        frac = (n - 1) / n
+        if op == "all-gather":
+            wire = rbytes * frac
+        elif op == "all-reduce":
+            wire = 2.0 * rbytes * frac
+        elif op == "reduce-scatter":
+            wire = rbytes * (n - 1)
+        elif op == "all-to-all":
+            wire = rbytes * frac
+        else:  # collective-permute
+            wire = rbytes
+        d = out.setdefault(op, {"count": 0, "result_bytes": 0.0,
+                                "wire_bytes": 0.0})
+        d["count"] += 1
+        d["result_bytes"] += rbytes
+        d["wire_bytes"] += wire
+        wire_total += wire
+    out["total_wire_bytes"] = wire_total
+    return out
+
+
+def _cost(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0))}
+
+
+def _mem(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    return {"argument_bytes": float(ma.argument_size_in_bytes),
+            "output_bytes": float(ma.output_size_in_bytes),
+            "temp_bytes": float(ma.temp_size_in_bytes),
+            "alias_bytes": float(ma.alias_size_in_bytes)}
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful FLOPs per step: 6·N_active·tokens (train), 2·N_active·tokens
+    (prefill/decode)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token
+
+
+def min_bytes(cfg, shape, cache_bytes: float = 0.0) -> float:
+    """Unavoidable HBM traffic per step (global): weights read once per
+    token-batch pass (+3x for train: grad write + momentum/update), and
+    for decode the KV-cache/state read."""
+    wbytes = cfg.active_param_count() * 2.0          # bf16 weights
+    if shape.kind == "train":
+        return 4.0 * cfg.param_count() * 2.0         # w, g, v, w'
+    if shape.kind == "prefill":
+        return wbytes
+    return wbytes + cache_bytes                       # decode
+
+
+def ideal_time(cfg, shape, n_chips: int, cache_bytes: float = 0.0) -> float:
+    """Roofline-ideal step time: max of the compute floor and the
+    unavoidable-memory floor (the right floor for decode)."""
+    tc = model_flops(cfg, shape) / (n_chips * HW["peak_flops"])
+    tm = min_bytes(cfg, shape, cache_bytes) / (n_chips * HW["hbm_bw"])
+    return max(tc, tm)
+
+
+def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               runtime: str = "stream", mode: str = "spectrain",
+               smoke: bool = False, rules_override=None,
+               plan_override: Optional[MeshPlan] = None,
+               fused_predict: bool = False, bwd_bf16: bool = False,
+               ticks: Optional[int] = None,
+               serve_bf16: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi_pod else "16x16",
+                           "runtime": runtime, "mode": mode}
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skip", skip_reason=reason)
+        return rec
+
+    if smoke:
+        cfg = smoke_config(cfg).replace(
+            n_layers=4, mesh_plan=MeshPlan(pipe=2, tensor=2,
+                                           num_microbatches=2))
+        shape = type(shape)(shape.name, 64, 8, shape.kind)
+        phys = make_smoke_mesh(data=2, model=4)
+    else:
+        phys = make_production_mesh(multi_pod=multi_pod)
+    if plan_override is not None:
+        cfg = cfg.replace(mesh_plan=plan_override)
+    plan = cfg.mesh_plan
+    n_ticks = ticks or plan.num_microbatches
+    rec["opts"] = {"fused_predict": fused_predict, "bwd_bf16": bwd_bf16,
+                   "ticks": n_ticks, "serve_bf16": serve_bf16}
+    mesh = refine_mesh(phys, plan.pipe, plan.tensor)
+    sizes = axis_sizes(mesh)
+    n_chips = int(np.prod(list(sizes.values())))
+    rec["chips"] = n_chips
+    rec["logical_mesh"] = dict(sizes)
+
+    model = Model(cfg)
+    if shape.kind == "decode":
+        rules = sh.decode_rules(cfg, mesh, global_batch=shape.global_batch)
+    else:
+        rules = sh.logical_rules(cfg, mesh)
+    if rules_override:
+        rules.update(rules_override)
+
+    ins = input_specs(cfg, shape)
+    param_sds = model.param_sds()
+    param_sh = sh.shardings_for(model.param_axes(), param_sds, mesh, rules)
+
+    t0 = time.time()
+    with mesh, use_rules(rules, sizes):
+        if shape.kind == "train":
+            batch_sds = ins["batch"]
+            batch_sh = sh.batch_specs(cfg, batch_sds, mesh, rules)
+            if runtime == "stream":
+                step = pipeline_stream.make_train_step(
+                    model, mode=mode, lr=1e-3,
+                    ticks_per_step=n_ticks, fused_predict=fused_predict,
+                    bwd_dtype="bfloat16" if bwd_bf16 else None)
+                state_sds = jax.eval_shape(
+                    lambda: pipeline_stream.make_state(
+                        model, jax.tree.map(
+                            lambda s: jnp.zeros(s.shape, s.dtype), param_sds),
+                        batch_sds, mode=mode,
+                        ticks_per_step=n_ticks,
+                        fused_predict=fused_predict))
+            else:
+                step = pipeline_sync.make_train_step(
+                    model, lr=1e-3,
+                    num_microbatches=plan.num_microbatches)
+                state_sds = {"params": param_sds,
+                             "momentum": jax.tree.map(
+                                 lambda s: jax.ShapeDtypeStruct(
+                                     s.shape, jnp.float32), param_sds),
+                             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+            state_sh = sh.stream_state_shardings(model, state_sds, mesh,
+                                                 rules)
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+            ).lower(state_sds, batch_sds)
+        elif shape.kind == "prefill":
+            batch_sds = ins["batch"]
+            batch_sh = sh.batch_specs(cfg, batch_sds, mesh, rules)
+
+            def prefill(params, batch):
+                logits, _ = model.prefill_logits(params, batch)
+                return logits
+            lowered = jax.jit(
+                prefill, in_shardings=(param_sh, batch_sh),
+                out_shardings=None).lower(param_sds, batch_sds)
+        else:  # decode
+            if serve_bf16:  # deployment format: bf16 serving weights
+                param_sds = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+                    if s.dtype == jnp.float32 else s, param_sds)
+            cache_sds = ins["cache"]
+            cache_sh = sh.shardings_for(cache_axes(model), cache_sds, mesh,
+                                        rules)
+            tok_sh = sh.batch_specs(cfg, {"t": ins["token"]}, mesh, rules)["t"]
+            rep = NamedSharding(mesh, P())
+
+            def serve_step(params, cache, token, pos):
+                return model.decode_step(params, cache, token, pos)
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(param_sh, cache_sh, tok_sh, rep),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),   # in-place cache update
+            ).lower(param_sds, cache_sds, ins["token"], ins["pos"])
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+
+    # trip-count-aware HLO accounting (per-device module); the XLA
+    # cost_analysis numbers are recorded too but undercount loop bodies.
+    hc = hlo_analyze(compiled.as_text())
+    cost = _cost(compiled)
+    mem = _mem(compiled)
+    rec.update(status="ok", xla_cost=cost, memory=mem,
+               collectives=hc["collectives"])
+    rec["wire_bytes_per_dev"] = hc["wire_bytes"]
+    rec["cost"] = {"flops": hc["flops"], "bytes_raw": hc["bytes"],
+                   "bytes": hc["bytes_fused"],
+                   "transcendentals": hc["transcendentals"]}
+
+    # ---- roofline terms (global = per-device x chips for flops/bytes) -----
+    # memory term uses the fused-bytes estimate: the raw per-op count
+    # reflects CPU-grade fusion, not what XLA:TPU emits.
+    mf = model_flops(cfg, shape)
+    flops_g = hc["flops"] * n_chips
+    bytes_g = hc["bytes_fused"] * n_chips
+    terms = {
+        "compute_s": flops_g / (n_chips * HW["peak_flops"]),
+        "memory_s": bytes_g / (n_chips * HW["hbm_bw"]),
+        "collective_s": hc["wire_bytes"] / HW["ici_bw"],
+    }
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    cache_bytes = 0.0
+    if shape.kind == "decode":
+        cache_bytes = sum(
+            float(np.prod(s.shape)) * s.dtype.itemsize
+            for s in jax.tree.leaves(ins["cache"]))
+    ideal = ideal_time(cfg, shape, n_chips, cache_bytes)
+    rec.update(
+        model_flops=mf, hlo_flops_global=flops_g, hlo_bytes_global=bytes_g,
+        useful_flops_ratio=(mf / flops_g if flops_g else 0.0),
+        terms=terms, dominant=dom, ideal_s=ideal,
+        roofline_fraction=(ideal / bound if bound else 0.0),
+    )
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--runtime", default="stream",
+                    choices=("stream", "sync"))
+    ap.add_argument("--mode", default="spectrain",
+                    choices=pipeline_stream.MODES)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny mesh (CI)")
+    ap.add_argument("--all", action="store_true",
+                    help="all (arch x shape) cells")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    # perf-iteration knobs (§Perf hillclimbing)
+    ap.add_argument("--fused-predict", action="store_true")
+    ap.add_argument("--bwd-bf16", action="store_true")
+    ap.add_argument("--ticks", type=int, default=0)
+    ap.add_argument("--serve-bf16", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence parallelism: residual stream sharded "
+                         "over the tensor axis (AR -> RS+AG)")
+    ap.add_argument("--ssm-chunk", type=int, default=0)
+    ap.add_argument("--no-ring-tp", action="store_true",
+                    help="replicate the in-flight ring buffers over the "
+                         "tensor axis (trade memory for fewer gathers)")
+    args = ap.parse_args(argv)
+    if args.no_ring_tp:
+        from repro.runtime import sharding as _sh
+        _sh._RING_TP = False
+    if args.ssm_chunk:
+        from repro.models import ssm as _ssm
+        _ssm.USE_CHUNKED = True
+        _ssm.CHUNK = args.ssm_chunk
+
+    cells = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multipod]
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = build_cell(arch, shape, multi_pod=mp,
+                                     runtime=args.runtime, mode=args.mode,
+                                     smoke=args.smoke,
+                                     fused_predict=args.fused_predict,
+                                     bwd_bf16=args.bwd_bf16,
+                                     ticks=args.ticks or None,
+                                     serve_bf16=args.serve_bf16,
+                                     rules_override=(
+                                         {"act_seq": "tensor"}
+                                         if args.seq_shard else None))
+                    if args.seq_shard:
+                        rec.setdefault("opts", {})["seq_shard"] = True
+                    if args.ssm_chunk:
+                        rec.setdefault("opts", {})["ssm_chunk"] = \
+                            args.ssm_chunk
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                cells.append(rec)
+                line = {k: v for k, v in rec.items()
+                        if k not in ("collectives",)}
+                print(json.dumps(line), flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    print(f"# {len(cells)} cells, {failures} failures", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod:   (pod=2, data=16, model=16) = 512 chips."""
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_smoke_mesh(*, data: int = 2, model: int = 4):
+    """Tiny mesh for CI-scale dry-run tests (subset of forced host devices)."""
+    import jax
+    n = data * model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[:n])

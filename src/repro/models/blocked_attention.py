@@ -1,0 +1,187 @@
+"""Memory-efficient blocked attention in pure XLA (flash algorithm).
+
+Never materializes the [sq, sk] score matrix: forward is an online-softmax
+scan over key blocks; backward is a custom VJP with doubly-blocked
+recompute (dq: q-outer/k-inner, dkv: k-outer/q-inner).  This is the XLA
+twin of ``repro.kernels.flash_attention`` (the Pallas TPU kernel) and the
+path the dry-run/compile cells take on big sequences.
+
+GQA layout:  q [b, sq, H, d];  k, v [b, sk, KV, d];  H % KV == 0.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pad_to(x, n, axis):
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _blocks(x, bs, axis):
+    n = x.shape[axis]
+    nb = (n + bs - 1) // bs
+    x = _pad_to(x, nb * bs, axis)
+    shape = x.shape[:axis] + (nb, bs) + x.shape[axis + 1:]
+    return x.reshape(shape), nb
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def blocked_attention(q, k, v, causal: bool = True, block_q: int = 512,
+                      block_k: int = 1024, pos_offset: int = 0):
+    o, _ = _fwd_impl(q, k, v, causal, block_q, block_k, pos_offset)
+    return o
+
+
+def _fwd_impl(q, k, v, causal, block_q, block_k, pos_offset):
+    b, sq, H, d = q.shape
+    sk, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = H // KV
+    scale = 1.0 / math.sqrt(d)
+    f32 = jnp.float32
+
+    qb = q.reshape(b, sq, KV, G, d)
+    kb_all, nk = _blocks(k, block_k, 1)          # [b, nk, bk, KV, d]
+    vb_all, _ = _blocks(v, block_k, 1)
+    q_pos = (jnp.arange(sq) + pos_offset)
+
+    def body(carry, ik):
+        m, l, acc = carry
+        kb = kb_all[:, ik]                        # [b, bk, KV, d]
+        vb = vb_all[:, ik]
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb).astype(f32) * scale
+        kpos = ik * block_k + jnp.arange(block_k)
+        mask = kpos[None, :] < sk
+        if causal:
+            mask = mask & (q_pos[:, None] >= kpos[None, :])
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m2[..., None])
+        corr = jnp.exp(m - m2)
+        l = corr * l + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(q.dtype), vb)
+        acc = corr[..., None] * acc + pv.astype(f32)
+        return (m2, l, acc), None
+
+    m0 = jnp.full((b, KV, G, sq), NEG_INF, f32)
+    l0 = jnp.zeros((b, KV, G, sq), f32)
+    a0 = jnp.zeros((b, KV, G, sq, dv), f32)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0), jnp.arange(nk))
+    o = (acc / jnp.maximum(l, 1e-30)[..., None])
+    o = jnp.moveaxis(o, -2, 1).reshape(b, sq, H, dv).astype(q.dtype)
+    lse = (m + jnp.log(jnp.maximum(l, 1e-30)))    # [b, KV, G, sq]
+    return o, lse
+
+
+def _fwd_rule(q, k, v, causal, block_q, block_k, pos_offset):
+    o, lse = _fwd_impl(q, k, v, causal, block_q, block_k, pos_offset)
+    return o, (q, k, v, o, lse)
+
+
+def _bwd_rule(causal, block_q, block_k, pos_offset, res, do):
+    q, k, v, o, lse = res
+    b, sq, H, d = q.shape
+    sk, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = H // KV
+    scale = 1.0 / math.sqrt(d)
+    f32 = jnp.float32
+
+    qg = q.reshape(b, sq, KV, G, d)
+    dog = do.reshape(b, sq, KV, G, dv)
+    og = o.reshape(b, sq, KV, G, dv)
+    delta = jnp.sum(og.astype(f32) * dog.astype(f32), axis=-1)  # [b,sq,KV,G]
+    delta = jnp.moveaxis(delta, 1, -1)                          # [b,KV,G,sq]
+
+    qb_all, nq = _blocks(qg, block_q, 1)       # [b, nq, bq, KV, G, d]
+    dob_all, _ = _blocks(dog, block_q, 1)
+    kb_all, nk = _blocks(k, block_k, 1)
+    vb_all, _ = _blocks(v, block_k, 1)
+    lse_b, _ = _blocks(lse, block_q, 3)        # [b, KV, G, nq, bq]
+    del_b, _ = _blocks(delta, block_q, 3)
+    q_pos_all = _pad_to(jnp.arange(sq) + pos_offset, nq * block_q, 0
+                        ).reshape(nq, block_q)
+
+    def s_block(qb, kb, iq, ik):
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb).astype(f32) * scale
+        kpos = ik * block_k + jnp.arange(block_k)
+        mask = kpos[None, :] < sk
+        if causal:
+            mask = mask & (q_pos_all[iq][:, None] >= kpos[None, :])
+        return jnp.where(mask[None, None, None], s, NEG_INF)
+
+    # ---- dq: outer over q blocks, inner over k blocks ---------------------
+    def dq_outer(_, iq):
+        qb = qb_all[:, iq]
+        dob = dob_all[:, iq]
+        lse_i = lse_b[:, :, :, iq]
+        del_i = del_b[:, :, :, iq]
+
+        def inner(dqa, ik):
+            kb = kb_all[:, ik]
+            vb = vb_all[:, ik]
+            s = s_block(qb, kb, iq, ik)
+            p = jnp.exp(s - lse_i[..., None])
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", dob, vb).astype(f32)
+            ds = p * (dp - del_i[..., None]) * scale
+            dqa = dqa + jnp.einsum("bkgqs,bskd->bqkgd",
+                                   ds.astype(q.dtype), kb).astype(f32)
+            return dqa, None
+
+        dq0 = jnp.zeros((b, block_q, KV, G, d), f32)
+        dqb, _ = jax.lax.scan(jax.checkpoint(inner), dq0, jnp.arange(nk))
+        return None, dqb
+
+    _, dq_blocks = jax.lax.scan(dq_outer, None, jnp.arange(nq))
+    dq = jnp.moveaxis(dq_blocks, 0, 1).reshape(b, nq * block_q, KV, G, d)
+    dq = dq[:, :sq].reshape(b, sq, H, d).astype(q.dtype)
+
+    # ---- dk/dv: outer over k blocks, inner over q blocks --------------------
+    def dkv_outer(_, ik):
+        kb = kb_all[:, ik]
+        vb = vb_all[:, ik]
+
+        def inner(carry, iq):
+            dka, dva = carry
+            qb = qb_all[:, iq]
+            dob = dob_all[:, iq]
+            lse_i = lse_b[:, :, :, iq]
+            del_i = del_b[:, :, :, iq]
+            s = s_block(qb, kb, iq, ik)
+            p = jnp.exp(s - lse_i[..., None])
+            dva = dva + jnp.einsum("bkgqs,bqkgd->bskd", p.astype(q.dtype),
+                                   dob).astype(f32)
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", dob, vb).astype(f32)
+            ds = p * (dp - del_i[..., None]) * scale
+            dka = dka + jnp.einsum("bkgqs,bqkgd->bskd", ds.astype(q.dtype),
+                                   qb).astype(f32)
+            return (dka, dva), None
+
+        zk = jnp.zeros((b, block_k, KV, d), f32)
+        zv = jnp.zeros((b, block_k, KV, dv), f32)
+        (dkb, dvb), _ = jax.lax.scan(jax.checkpoint(inner), (zk, zv),
+                                     jnp.arange(nq))
+        return None, (dkb, dvb)
+
+    _, (dk_blocks, dv_blocks) = jax.lax.scan(dkv_outer, None, jnp.arange(nk))
+    dk = jnp.moveaxis(dk_blocks, 0, 1).reshape(b, nk * block_k, KV, d)
+    dv = jnp.moveaxis(dv_blocks, 0, 1).reshape(b, nk * block_k, KV, dv)
+    dk = dk[:, :sk].astype(k.dtype)
+    dv = dv[:, :sk].astype(v.dtype)
+    return dq, dk, dv
+
+
+blocked_attention.defvjp(_fwd_rule, _bwd_rule)

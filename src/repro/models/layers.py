@@ -1,0 +1,282 @@
+"""Layer primitives + ParamSpec machinery.
+
+Params are plain pytrees (nested dicts of jnp arrays).  Every module
+declares its parameters as ``ParamSpec``s so that:
+  * ``init_params``     materializes them with a PRNG key,
+  * ``specs_to_sds``    gives ShapeDtypeStructs for allocation-free dry-runs,
+  * ``specs_to_axes``   gives the logical-axis pytree driving GSPMD sharding.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# ParamSpec
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"            # normal | zeros | ones | uniform
+    scale: float = 1.0              # stddev multiplier (normal) / bound
+    dtype: Optional[str] = None     # None -> cfg.param_dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    return shape[-2] if len(shape) >= 2 else max(1, shape[-1])
+
+
+def init_one(spec: ParamSpec, key, default_dtype: str):
+    dtype = jnp.dtype(spec.dtype or default_dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "uniform":
+        return jax.random.uniform(key, spec.shape, dtype,
+                                  minval=-spec.scale, maxval=spec.scale)
+    std = spec.scale / math.sqrt(_fan_in(spec.shape))
+    return (jax.random.normal(key, spec.shape) * std).astype(dtype)
+
+
+def init_params(specs, key, default_dtype: str = "float32"):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_one(s, k, default_dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def specs_to_sds(specs, default_dtype: str = "float32"):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or default_dtype)),
+        specs, is_leaf=is_spec)
+
+
+def specs_to_axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def stack_spec(spec: ParamSpec, n: int, axis_name: Optional[str]) -> ParamSpec:
+    return ParamSpec((n,) + spec.shape, (axis_name,) + spec.axes,
+                     spec.init, spec.scale, spec.dtype)
+
+
+def stack_specs(specs, n: int, axis_name: Optional[str]):
+    return jax.tree.map(lambda s: stack_spec(s, n, axis_name), specs,
+                        is_leaf=is_spec)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# activation sharding hooks (set by the runtime; no-op on bare CPU tests)
+
+_ACTIVE: Dict[str, Any] = {}
+
+
+class use_rules:
+    """Activate logical->mesh activation-sharding rules.
+
+    rules: {logical_axis: mesh axis | tuple | None}
+    sizes: {mesh_axis: size} for divisibility checks.
+    """
+
+    def __init__(self, rules: Dict[str, Any], sizes: Dict[str, int]):
+        self.ctx = {"rules": rules or {}, "sizes": sizes or {}}
+
+    def __enter__(self):
+        global _ACTIVE
+        self._old = _ACTIVE
+        _ACTIVE = self.ctx
+        return self
+
+    def __exit__(self, *a):
+        global _ACTIVE
+        _ACTIVE = self._old
+
+
+def shard_act(x, *logical_axes):
+    """with_sharding_constraint by logical axis names, if rules are active.
+
+    Drops any assignment that does not divide the dim or reuses a mesh axis.
+    """
+    if not _ACTIVE:
+        return x
+    from jax.sharding import PartitionSpec as P
+    rules, sizes = _ACTIVE["rules"], _ACTIVE["sizes"]
+    used: set = set()
+    spec = []
+    for ax, dim in zip(logical_axes, x.shape):
+        val = rules.get(ax) if ax else None
+        if val is None:
+            spec.append(None)
+            continue
+        names = (val,) if isinstance(val, str) else tuple(val)
+        names = tuple(n for n in names if n in sizes and n not in used)
+        prod = 1
+        for n in names:
+            prod *= sizes[n]
+        if not names or prod == 1 or dim % prod != 0:
+            spec.append(None)
+            continue
+        used.update(names)
+        spec.append(names[0] if len(names) == 1 else names)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def norm_specs(cfg, kind: Optional[str] = None, dim: Optional[int] = None):
+    kind = kind or cfg.norm
+    d = dim or cfg.d_model
+    specs = {"scale": ParamSpec((d,), ("embed",), "ones")}
+    if kind == "layernorm":
+        specs["bias"] = ParamSpec((d,), ("embed",), "zeros")
+    return specs
+
+
+def norm_apply(cfg, p, x, kind: Optional[str] = None, eps: float = 1e-5):
+    kind = kind or cfg.norm
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def groupnorm_heads(x, scale, bias, n_heads: int, eps: float = 1e-5):
+    """GroupNorm over head_dim groups (RWKV output norm). x: [..., d]."""
+    orig = x.shape
+    xf = x.astype(jnp.float32).reshape(orig[:-1] + (n_heads, orig[-1] // n_heads))
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(orig)
+    y = y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+
+
+def mlp_specs(cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.mlp_gated:
+        return {
+            "wg": ParamSpec((d, ff), ("embed", "mlp")),
+            "w1": ParamSpec((d, ff), ("embed", "mlp")),
+            "w2": ParamSpec((ff, d), ("mlp", "embed")),
+        }
+    return {
+        "w1": ParamSpec((d, ff), ("embed", "mlp")),
+        "w2": ParamSpec((ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(cfg, p, x):
+    dt = x.dtype
+    if cfg.mlp_gated:
+        h = jax.nn.silu(x @ p["wg"].astype(dt)) * (x @ p["w1"].astype(dt))
+    else:
+        h = jax.nn.gelu(x @ p["w1"].astype(dt))
+    h = shard_act(h, "act_batch", None, "mlp")
+    return h @ p["w2"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+
+
+def embed_specs(cfg):
+    V, d = cfg.vocab_padded, cfg.d_model
+    specs = {"tok": ParamSpec((V, d), ("vocab", "embed"), "normal", 1.0)}
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((d, V), ("embed", "vocab"))
+    if cfg.pos_embed == "sinusoidal":
+        pass  # computed, not learned
+    return specs
+
+
+def embed_apply(cfg, p, tokens):
+    emb = jnp.take(p["tok"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    emb = emb * math.sqrt(cfg.d_model)
+    return shard_act(emb, "act_batch", "act_seq", None)
+
+
+def unembed_apply(cfg, p, x):
+    w = (p["tok"].T if cfg.tie_embeddings else p["unembed"]).astype(x.dtype)
+    logits = x @ w
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return shard_act(logits, "act_batch", "act_seq", "vocab")
+
+
+def sinusoidal_pos(seq: int, d: int, offset: int = 0, dtype=jnp.float32):
+    pos = jnp.arange(offset, offset + seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope_freqs(cfg, hd: Optional[int] = None):
+    hd = hd or cfg.hd
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, jnp.float32) / hd))
+
+
+def apply_rope(x, positions, inv_freq):
+    """x: [..., seq, heads, hd]; positions: [..., seq] (int)."""
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # [..., s, hd/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., None, :]  # broadcast over heads
+    cos = cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+
+
+def softmax_xent(logits, targets, vocab_size: int, z_loss: float = 0.0):
+    """Mean token cross-entropy; ignores padded vocab tail via valid mask on
+    targets (targets assumed < vocab_size)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    loss = lse - gold
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)

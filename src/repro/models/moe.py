@@ -1,0 +1,124 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-bounded scatter
+dispatch (no O(T·E·C) dispatch einsum), shared experts (DeepSeekMoE),
+load-balance aux loss.
+
+Dispatch is GROUPED (GShard-style): tokens are split into ``num_groups``
+groups (aligned with the data-parallel shards), each group routes locally
+with its own capacity — no cross-shard cumsum, no gathering the global
+token stream.  Experts shard over the `tensor` mesh axis (EP); the group
+dim shards over `data`; GSPMD inserts the expert all-to-alls.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, shard_act
+
+# groups used for local dispatch; aligned with the data axis of the
+# production mesh.  Overridden to 1 automatically when T % groups != 0.
+DISPATCH_GROUPS = 16
+
+
+def moe_specs(cfg):
+    mo, d, ff = cfg.moe, cfg.d_model, cfg.d_ff
+    E = mo.num_experts
+    mats = (("wg", "w1", "w2") if cfg.mlp_gated else ("w1", "w2"))
+    specs: Dict = {
+        "router": ParamSpec((d, E), ("embed", "expert"), "normal", 0.1),
+    }
+    for m in mats:
+        shp = (E, ff, d) if m == "w2" else (E, d, ff)
+        axes = ("expert", "mlp", "embed") if m == "w2" \
+            else ("expert", "embed", "mlp")
+        specs[m] = ParamSpec(shp, axes)
+    if mo.num_shared:
+        for m in mats:
+            shp = (mo.num_shared, ff, d) if m == "w2" \
+                else (mo.num_shared, d, ff)
+            axes = (None, "mlp", "embed") if m == "w2" \
+                else (None, "embed", "mlp")
+            specs["shared_" + m] = ParamSpec(shp, axes)
+    return specs
+
+
+def _expert_ffn(cfg, w, h):
+    """h: [..., E, C, d] -> same through per-expert FFN."""
+    dt = h.dtype
+    if cfg.mlp_gated:
+        a = jax.nn.silu(jnp.einsum("...ecd,edf->...ecf", h,
+                                   w["wg"].astype(dt)))
+        z = a * jnp.einsum("...ecd,edf->...ecf", h, w["w1"].astype(dt))
+    else:
+        z = jax.nn.gelu(jnp.einsum("...ecd,edf->...ecf", h,
+                                   w["w1"].astype(dt)))
+    z = shard_act(z, "act_batch", "expert", None, None) if z.ndim == 4 \
+        else shard_act(z, "expert", None, None)
+    return jnp.einsum("...ecf,efd->...ecd", z, w["w2"].astype(dt))
+
+
+def moe_apply(cfg, p, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [b,s,d] -> (out [b,s,d], aux_loss scalar)."""
+    mo = cfg.moe
+    E, k = mo.num_experts, mo.top_k
+    b, s, d = x.shape
+    T = b * s
+    G = DISPATCH_GROUPS if T % DISPATCH_GROUPS == 0 and \
+        T // DISPATCH_GROUPS >= E else 1
+    Tg = T // G
+    xg = x.reshape(G, Tg, d)
+    xg = shard_act(xg, "act_batch", None, None)
+    dt = x.dtype
+
+    logits = (xg @ p["router"].astype(dt)).astype(jnp.float32)  # [G,Tg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                         # [G,Tg,k]
+    if mo.num_shared:  # deepseek: renormalize among selected
+        gate = gate / (jnp.sum(gate, -1, keepdims=True) + 1e-9)
+
+    # load-balance aux loss (Switch-style), computed globally
+    me = jnp.mean(probs, axis=(0, 1))                           # [E]
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32),
+                          axis=2), axis=(0, 1))
+    aux = mo.aux_loss_coef * E * jnp.sum(me * ce)
+
+    # ---- grouped capacity-bounded scatter dispatch -----------------------
+    cap = min(int(mo.capacity_factor * Tg * k / E) + 1, Tg)
+    e_flat = idx.reshape(G, Tg * k)                             # [G, Tgk]
+    w_flat = gate.reshape(G, Tg * k).astype(dt)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)         # [G,Tgk,E]
+    pos_in_e = jnp.sum(onehot * (jnp.cumsum(onehot, axis=1) - 1), axis=-1)
+    keep = pos_in_e < cap
+    dest_c = jnp.where(keep, pos_in_e, cap)                     # overflow
+
+    tok_ids = jnp.repeat(jnp.arange(Tg), k)                     # [Tgk]
+
+    def scatter_group(xg_g, e_g, c_g, keep_g):
+        src = jnp.where(keep_g[:, None], xg_g[tok_ids], 0)
+        return jnp.zeros((E, cap + 1, d), dt).at[e_g, c_g].add(
+            src, mode="drop")
+
+    buf = jax.vmap(scatter_group)(xg, e_flat, dest_c, keep)     # [G,E,C+1,d]
+    buf = shard_act(buf, "act_batch", "expert", None, None)
+
+    out_buf = _expert_ffn(cfg, p, buf[:, :, :cap])
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((G, E, 1, d), dt)], axis=2)
+
+    def gather_group(ob_g, e_g, c_g, w_g, keep_g):
+        got = ob_g[e_g, c_g] * (w_g * keep_g.astype(dt))[:, None]
+        return jnp.zeros((Tg, d), dt).at[tok_ids].add(got)
+
+    out = jax.vmap(gather_group)(out_buf, e_flat, dest_c, w_flat, keep)
+    out = shard_act(out, "act_batch", None, None)
+
+    if mo.num_shared:
+        sh = {m[len("shared_"):]: p[m] for m in p if m.startswith("shared_")}
+        hs = jnp.broadcast_to(xg.reshape(G * Tg, d),
+                              (mo.num_shared, G * Tg, d))
+        shared_out = jnp.sum(_expert_ffn(cfg, sh, hs), axis=0)  # [T, d]
+        out = out.reshape(G * Tg, d) + shared_out
+
+    return out.reshape(b, s, d), aux

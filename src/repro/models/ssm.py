@@ -1,0 +1,394 @@
+"""Attention-free sequence mixers: RWKV-6 ("Finch") and Mamba-2 (SSD).
+
+Both expose:  specs / apply (full sequence, differentiable lax.scan) /
+init_state / decode_step semantics via the same ``apply`` with ``state``.
+The Pallas kernels in ``repro.kernels`` implement the same math chunked for
+TPU; ``ref.py`` oracles call back into these.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (ParamSpec, groupnorm_heads, norm_apply,
+                                 shard_act)
+
+State = Dict[str, Any]
+
+# ===========================================================================
+# RWKV-6 time-mix + channel-mix
+# ===========================================================================
+
+_RWKV_LORA_MIX = 32
+_RWKV_LORA_DECAY = 64
+
+
+def rwkv6_tm_specs(cfg):
+    d = cfg.d_model
+    return {
+        "mu_x": ParamSpec((d,), ("embed",), "uniform", 0.5),
+        "mus": ParamSpec((5, d), (None, "embed"), "uniform", 0.5),
+        "mix_A": ParamSpec((d, 5 * _RWKV_LORA_MIX), ("embed", None)),
+        "mix_B": ParamSpec((5, _RWKV_LORA_MIX, d), (None, None, "embed")),
+        "w0": ParamSpec((d,), ("embed",), "uniform", 1.0),
+        "dw_A": ParamSpec((d, _RWKV_LORA_DECAY), ("embed", None)),
+        "dw_B": ParamSpec((_RWKV_LORA_DECAY, d), (None, "embed")),
+        "u": ParamSpec((d,), ("heads",), "uniform", 0.5),
+        "wr": ParamSpec((d, d), ("embed", "heads")),
+        "wk": ParamSpec((d, d), ("embed", "heads")),
+        "wv": ParamSpec((d, d), ("embed", "heads")),
+        "wg": ParamSpec((d, d), ("embed", "heads")),
+        "wo": ParamSpec((d, d), ("heads", "embed")),
+        "gn_scale": ParamSpec((d,), ("heads",), "ones"),
+        "gn_bias": ParamSpec((d,), ("heads",), "zeros"),
+    }
+
+
+def rwkv6_cm_specs(cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "mu_ck": ParamSpec((d,), ("embed",), "uniform", 0.5),
+        "mu_cr": ParamSpec((d,), ("embed",), "uniform", 0.5),
+        "wck": ParamSpec((d, ff), ("embed", "mlp")),
+        "wcv": ParamSpec((ff, d), ("mlp", "embed")),
+        "wcr": ParamSpec((d, d), ("embed", "embed2")),
+    }
+
+
+def _token_shift(x, prev):
+    """prev: [b,d] last token of previous chunk (zeros at stream start)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def rwkv6_wkv_ref(r, k, v, w, u, S0):
+    """The WKV6 recurrence (pure scan oracle, fp32).
+
+    r,k,v,w: [b,s,h,hd]; u: [h,hd]; S0: [b,h,hd,hd] (key x value).
+    Returns y [b,s,h,hd], S_T.
+    """
+    f32 = jnp.float32
+    r, k, v, w = (t.astype(f32) for t in (r, k, v, w))
+    u = u.astype(f32)
+
+    def step(S, rkvw):
+        rt, kt, vt, wt = rkvw  # [b,h,hd]
+        kv = kt[..., :, None] * vt[..., None, :]          # [b,h,hd,hd]
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + u[..., :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    S_T, ys = jax.lax.scan(step, S0.astype(f32), xs)
+    return jnp.moveaxis(ys, 0, 1), S_T
+
+
+def rwkv6_wkv_chunked(r, k, v, w, u, S0, *, chunk: int = 32):
+    """Chunk-parallel WKV6 (the Pallas kernel's math in XLA, fully
+    differentiable).  Replaces the O(s)-sequential scan with O(s/chunk)
+    sequential steps of MXU-friendly [C,C] matmuls — the hillclimb fix for
+    the scan-bound rwkv6/zamba2 training cells.
+
+    r,k,v,w: [b,s,h,hd]; u: [h,hd]; S0: [b,h,hd,hd].  Returns (y, S_T).
+    """
+    f32 = jnp.float32
+    b, s, h, hd = r.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rc, kc, vc, wc = (t.astype(f32).reshape(b, nc, chunk, h, hd)
+                      for t in (r, k, v, w))
+    uf = u.astype(f32)
+    rows = jnp.arange(chunk)[:, None]
+    cols = jnp.arange(chunk)[None, :]
+
+    def body(S, inp):
+        r_, k_, v_, w_ = inp                     # [b,C,h,hd]
+        cp = jnp.cumprod(w_, axis=1)
+        cw = cp / w_
+        r_s = r_ * cw
+        k_s = k_ / jnp.maximum(cp, 1e-24)
+        score = jnp.einsum("bihd,bjhd->bhij", r_s, k_s)
+        score = jnp.where((rows > cols)[None, None], score, 0.0)
+        diag = jnp.einsum("bihd,hd,bihd->bhi", r_, uf, k_)
+        score = score + jnp.where((rows == cols)[None, None],
+                                  diag[..., :, None], 0.0)
+        y = jnp.einsum("bhij,bjhd->bihd", score, v_)
+        y = y + jnp.einsum("bihd,bhde->bihe", r_s, S)
+        cpl = cp[:, -1]                          # [b,h,hd]
+        k_tail = k_ * (cpl[:, None] / jnp.maximum(cp, 1e-24))
+        S = cpl[..., :, None] * S + jnp.einsum("bjhd,bjhe->bhde", k_tail, v_)
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rc, kc, vc, wc))
+    S_T, ys = jax.lax.scan(body, S0.astype(f32), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, hd)
+    return y, S_T
+
+
+def mamba2_ssd_chunked(xh, dt, decay, B, C, S0, *, chunk: int = 32):
+    """Chunk-parallel SSD (Mamba-2 dual form) in XLA, differentiable.
+
+    xh: [b,s,nh,hd]; dt,decay: [b,s,nh]; B,C: [b,s,g,ds]; S0 [b,nh,hd,ds].
+    """
+    f32 = jnp.float32
+    b, s, nh, hd = xh.shape
+    g = B.shape[2]
+    rep = nh // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(f32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(f32)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    resh = lambda t, tail: t.astype(f32).reshape((b, nc, chunk) + tail)
+    xc = resh(xh, (nh, hd))
+    dc = resh(dt, (nh,))
+    ec = resh(decay, (nh,))
+    Bc = resh(Bh, (nh, B.shape[-1]))
+    Cc = resh(Ch, (nh, B.shape[-1]))
+    rows = jnp.arange(chunk)[:, None]
+    cols = jnp.arange(chunk)[None, :]
+
+    def body(S, inp):
+        x_, dt_, de_, B_, C_ = inp
+        cp = jnp.cumprod(de_, axis=1)            # [b,C,h]
+        dtx = dt_[..., None] * x_                # [b,C,h,hd]
+        score = jnp.einsum("bihn,bjhn->bhij", C_, B_)
+        cph = cp.transpose(0, 2, 1)              # [b,h,C]
+        ratio = cph[:, :, :, None] / jnp.maximum(cph[:, :, None, :], 1e-24)
+        score = jnp.where((rows >= cols)[None, None], score * ratio, 0.0)
+        y = jnp.einsum("bhij,bjhp->bihp", score, dtx)
+        y = y + cp[..., None] * jnp.einsum("bihn,bhpn->bihp", C_, S)
+        cpl = cp[:, -1]                          # [b,h]
+        tail = (cpl[:, None] / jnp.maximum(cp, 1e-24))[..., None] * dtx
+        S = cpl[..., None, None] * S + jnp.einsum("bjhp,bjhn->bhpn",
+                                                  tail, B_)
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xc, dc, ec, Bc, Cc))
+    S_T, ys = jax.lax.scan(body, S0.astype(f32), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, nh, hd)
+    return y, S_T
+
+
+# Chunked-path toggles (hillclimb: enable for long-sequence training).
+# Off by default: the chunk-product rescaling underflows fp32 for extreme
+# decays (w < ~0.15 over a 32-chunk), the same stability envelope as
+# production GLA/RWKV kernels, which solve it with log-space chunk-local
+# renormalization — done inside the Pallas kernel on TPU; the XLA twin
+# here keeps the plain form and is gated to measured/benchmark paths.
+USE_CHUNKED = False
+CHUNKED_MIN_SEQ = 256
+CHUNK = 32
+
+
+def rwkv6_tm_apply(cfg, p, x, state: Optional[State] = None,
+                   wkv_fn=None) -> Tuple[jnp.ndarray, Optional[State]]:
+    """x: [b,s,d] (already normed).  state carries (x_prev, S)."""
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    b, s, _ = x.shape
+    dt = x.dtype
+    prev = state["x_tm"] if state is not None else jnp.zeros((b, d), dt)
+    xp = _token_shift(x, prev)
+    sx = xp - x
+    xxx = x + sx * p["mu_x"].astype(dt)
+    zmix = jnp.tanh(xxx @ p["mix_A"].astype(dt)).reshape(b, s, 5, _RWKV_LORA_MIX)
+    mix = jnp.einsum("bsfk,fkd->bsfd", zmix, p["mix_B"].astype(dt))
+    comp = x[:, :, None, :] + sx[:, :, None, :] * (
+        p["mus"].astype(dt)[None, None] + mix)
+    xw, xk, xv, xr, xg = [comp[:, :, i] for i in range(5)]
+
+    logw = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["dw_A"].astype(dt)) @ p["dw_B"].astype(dt)
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw))                            # [b,s,d] in (0,1)
+
+    r = (xr @ p["wr"].astype(dt)).reshape(b, s, H, hd)
+    k = (xk @ p["wk"].astype(dt)).reshape(b, s, H, hd)
+    v = (xv @ p["wv"].astype(dt)).reshape(b, s, H, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    r = shard_act(r, "act_batch", None, "heads", None)
+    k = shard_act(k, "act_batch", None, "heads", None)
+    v = shard_act(v, "act_batch", None, "heads", None)
+    wh = w.reshape(b, s, H, hd)
+    u = p["u"].astype(jnp.float32).reshape(H, hd)
+
+    S0 = (state["S"] if state is not None
+          else jnp.zeros((b, H, hd, hd), jnp.float32))
+    fn = wkv_fn
+    if fn is None:
+        if (USE_CHUNKED and state is None and s >= CHUNKED_MIN_SEQ
+                and s % CHUNK == 0):
+            fn = lambda *a: rwkv6_wkv_chunked(*a, chunk=CHUNK)
+        else:
+            fn = rwkv6_wkv_ref
+    y, S_T = fn(r, k, v, wh, u, S0)
+    y = y.reshape(b, s, d).astype(dt)
+    y = groupnorm_heads(y, p["gn_scale"], p["gn_bias"], H)
+    out = (y * g) @ p["wo"].astype(dt)
+    new_state = None
+    if state is not None:
+        new_state = {"x_tm": x[:, -1, :], "S": S_T}
+    return out, new_state
+
+
+def rwkv6_cm_apply(cfg, p, x, state: Optional[State] = None):
+    dt = x.dtype
+    b = x.shape[0]
+    prev = state["x_cm"] if state is not None else jnp.zeros(
+        (b, cfg.d_model), dt)
+    xp = _token_shift(x, prev)
+    sx = xp - x
+    xk = x + sx * p["mu_ck"].astype(dt)
+    xr = x + sx * p["mu_cr"].astype(dt)
+    h = jnp.square(jax.nn.relu(xk @ p["wck"].astype(dt)))
+    h = shard_act(h, "act_batch", None, "mlp")
+    out = jax.nn.sigmoid(xr @ p["wcr"].astype(dt)) * (h @ p["wcv"].astype(dt))
+    new_state = {"x_cm": x[:, -1, :]} if state is not None else None
+    return out, new_state
+
+
+def rwkv6_init_state(cfg, batch: int, dtype):
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    return {"x_tm": jnp.zeros((batch, d), dtype),
+            "x_cm": jnp.zeros((batch, d), dtype),
+            "S": jnp.zeros((batch, H, hd, hd), jnp.float32)}
+
+
+# ===========================================================================
+# Mamba-2 (SSD)
+# ===========================================================================
+
+
+def mamba2_specs(cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    bc = 2 * s.n_groups * s.d_state
+    return {
+        "w_zx": ParamSpec((d, 2 * d_in), ("embed", "ssm")),
+        "w_bc": ParamSpec((d, bc), ("embed", None)),
+        "w_dt": ParamSpec((d, nh), ("embed", "heads")),
+        "conv_x_w": ParamSpec((s.conv_kernel, d_in), (None, "ssm")),
+        "conv_x_b": ParamSpec((d_in,), ("ssm",), "zeros"),
+        "conv_bc_w": ParamSpec((s.conv_kernel, bc), (None, None)),
+        "conv_bc_b": ParamSpec((bc,), (None,), "zeros"),
+        "A_log": ParamSpec((nh,), ("heads",), "uniform", 1.0),
+        "D": ParamSpec((nh,), ("heads",), "ones"),
+        "dt_bias": ParamSpec((nh,), ("heads",), "uniform", 1.0),
+        "norm_scale": ParamSpec((d_in,), ("ssm",), "ones"),
+        "w_out": ParamSpec((d_in, d), ("ssm", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv.  x: [b,s,c]; w: [k,c].  conv_state: [b,k-1,c]."""
+    kk = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], kk - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, j:j + x.shape[1], :] * w[j][None, None, :]
+            for j in range(kk))
+    new_state = xp[:, -(kk - 1):, :] if conv_state is not None else None
+    return y + b[None, None, :], new_state
+
+
+def mamba2_ssd_ref(xh, dt, decay, B, C, S0):
+    """SSD recurrence oracle (fp32 scan).
+
+    xh: [b,s,nh,hd]; dt,decay: [b,s,nh]; B,C: [b,s,g,ds]; S0: [b,nh,hd,ds].
+    """
+    f32 = jnp.float32
+    nh = xh.shape[2]
+    g = B.shape[2]
+    rep = nh // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(f32)   # [b,s,nh,ds]
+    Ch = jnp.repeat(C, rep, axis=2).astype(f32)
+    xh, dt, decay = (t.astype(f32) for t in (xh, dt, decay))
+
+    def step(S, inp):
+        x_t, dt_t, de_t, B_t, C_t = inp
+        S = S * de_t[..., None, None] + (
+            (dt_t[..., None] * x_t)[..., :, None] * B_t[..., None, :])
+        y = jnp.einsum("bhps,bhs->bhp", S, C_t)
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xh, dt, decay, Bh, Ch))
+    S_T, ys = jax.lax.scan(step, S0.astype(f32), xs)
+    return jnp.moveaxis(ys, 0, 1), S_T
+
+
+def mamba2_apply(cfg, p, x, state: Optional[State] = None,
+                 ssd_fn=None) -> Tuple[jnp.ndarray, Optional[State]]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    hd = s.head_dim
+    b, sl, _ = x.shape
+    dt_ = x.dtype
+
+    zx = x @ p["w_zx"].astype(dt_)
+    z, xr = jnp.split(zx, 2, axis=-1)
+    bc = x @ p["w_bc"].astype(dt_)
+    delta = jax.nn.softplus(
+        (x @ p["w_dt"].astype(dt_)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                  # [b,s,nh]
+
+    cs_x = state["conv_x"] if state is not None else None
+    cs_bc = state["conv_bc"] if state is not None else None
+    xr, new_cs_x = _causal_conv(xr, p["conv_x_w"].astype(dt_),
+                                p["conv_x_b"].astype(dt_), cs_x)
+    bc, new_cs_bc = _causal_conv(bc, p["conv_bc_w"].astype(dt_),
+                                 p["conv_bc_b"].astype(dt_), cs_bc)
+    xr = jax.nn.silu(xr)
+    bc = jax.nn.silu(bc)
+    B, C = jnp.split(bc, 2, axis=-1)
+    B = B.reshape(b, sl, s.n_groups, s.d_state)
+    C = C.reshape(b, sl, s.n_groups, s.d_state)
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))             # (nh,)
+    decay = jnp.exp(a[None, None, :] * delta)                # [b,s,nh]
+    xh = xr.reshape(b, sl, nh, hd)
+    xh = shard_act(xh, "act_batch", None, "heads", None)
+
+    S0 = (state["S"] if state is not None
+          else jnp.zeros((b, nh, hd, s.d_state), jnp.float32))
+    fn = ssd_fn
+    if fn is None:
+        if (USE_CHUNKED and state is None and sl >= CHUNKED_MIN_SEQ
+                and sl % CHUNK == 0):
+            fn = lambda *a: mamba2_ssd_chunked(*a, chunk=CHUNK)
+        else:
+            fn = mamba2_ssd_ref
+    y, S_T = fn(xh, delta, decay, B, C, S0)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, sl, d_in).astype(dt_)
+
+    # gated RMSNorm
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + 1e-5)
+         * p["norm_scale"].astype(jnp.float32)).astype(dt_)
+    out = y @ p["w_out"].astype(dt_)
+
+    new_state = None
+    if state is not None:
+        new_state = {"conv_x": new_cs_x, "conv_bc": new_cs_bc, "S": S_T}
+    return out, new_state
+
+
+def mamba2_init_state(cfg, batch: int, dtype):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    bc = 2 * s.n_groups * s.d_state
+    return {
+        "conv_x": jnp.zeros((batch, s.conv_kernel - 1, d_in), dtype),
+        "conv_bc": jnp.zeros((batch, s.conv_kernel - 1, bc), dtype),
+        "S": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }

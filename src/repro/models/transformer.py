@@ -1,0 +1,112 @@
+"""Transformer block assembly for every family.
+
+A *block* = one layer (attention/SSM mixer + MLP/MoE + norms, pre-norm
+residual).  Blocks expose cache/state hooks for decode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (mlp_apply, mlp_specs, norm_apply,
+                                 norm_specs, shard_act)
+
+
+def block_specs(cfg, cross: bool = False) -> Dict[str, Any]:
+    fam_ssm = cfg.ssm is not None
+    if fam_ssm and cfg.ssm.kind == "rwkv6":
+        return {
+            "ln1": norm_specs(cfg),
+            "tm": ssm_mod.rwkv6_tm_specs(cfg),
+            "ln2": norm_specs(cfg),
+            "cm": ssm_mod.rwkv6_cm_specs(cfg),
+        }
+    if fam_ssm and cfg.ssm.kind == "mamba2":
+        # zamba2-style mamba block: norm + mamba mixer + residual (no MLP)
+        return {"ln1": norm_specs(cfg), "mamba": ssm_mod.mamba2_specs(cfg)}
+    specs: Dict[str, Any] = {
+        "ln1": norm_specs(cfg),
+        "attn": attn.attn_specs(cfg),
+        "ln2": norm_specs(cfg),
+    }
+    if cross:
+        specs["lnx"] = norm_specs(cfg)
+        specs["xattn"] = attn.gqa_specs(cfg, cross=True)
+    if cfg.moe is not None:
+        specs["moe"] = moe_mod.moe_specs(cfg)
+    else:
+        specs["mlp"] = mlp_specs(cfg)
+    return specs
+
+
+def shared_block_specs(cfg) -> Dict[str, Any]:
+    """zamba2 shared attention block: full attn + MLP."""
+    return {
+        "ln1": norm_specs(cfg),
+        "attn": attn.gqa_specs(cfg),
+        "ln2": norm_specs(cfg),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def block_apply(cfg, p, x, *, pos_offset: int = 0, causal: bool = True,
+                cache: Optional[Dict] = None, pos=None, enc_out=None,
+                state: Optional[Dict] = None):
+    """Returns (x, aux, new_cache, new_state)."""
+    aux = jnp.zeros((), jnp.float32)
+    fam_ssm = cfg.ssm is not None
+
+    if fam_ssm and cfg.ssm.kind == "rwkv6":
+        h, st_tm = ssm_mod.rwkv6_tm_apply(
+            cfg, p["tm"], norm_apply(cfg, p["ln1"], x), state)
+        x = x + h
+        h, st_cm = ssm_mod.rwkv6_cm_apply(
+            cfg, p["cm"], norm_apply(cfg, p["ln2"], x), state)
+        x = x + h
+        new_state = None
+        if state is not None:
+            new_state = {**st_tm, **st_cm}
+        return x, aux, None, new_state
+
+    if fam_ssm and cfg.ssm.kind == "mamba2":
+        h, new_state = ssm_mod.mamba2_apply(
+            cfg, p["mamba"], norm_apply(cfg, p["ln1"], x), state)
+        return x + h, aux, None, new_state
+
+    h, new_cache = attn.attn_apply(
+        cfg, p["attn"], norm_apply(cfg, p["ln1"], x),
+        pos_offset=pos_offset, causal=causal, cache=cache, pos=pos)
+    x = x + h
+    # sequence parallelism hook: when act_seq -> tensor, the residual
+    # stream is seq-sharded between blocks and GSPMD replaces the TP
+    # all-reduces with reduce-scatter + all-gather (half the wire bytes)
+    x = shard_act(x, "act_batch", "act_seq", None)
+    if "xattn" in p:
+        assert enc_out is not None
+        h, _ = attn.gqa_apply(cfg, p["xattn"],
+                              norm_apply(cfg, p["lnx"], x),
+                              causal=False, kv_input=enc_out)
+        x = x + h
+    xn = norm_apply(cfg, p["ln2"], x)
+    if "moe" in p:
+        h, aux = moe_mod.moe_apply(cfg, p["moe"], xn)
+    else:
+        h = mlp_apply(cfg, p["mlp"], xn)
+    x = shard_act(x + h, "act_batch", "act_seq", None)
+    return x, aux, new_cache, None
+
+
+def shared_block_apply(cfg, p, x, *, pos_offset: int = 0, cache=None,
+                       pos=None):
+    h, new_cache = attn.gqa_apply(cfg, p["attn"],
+                                  norm_apply(cfg, p["ln1"], x),
+                                  pos_offset=pos_offset, causal=True,
+                                  cache=cache, pos=pos)
+    x = x + h
+    x = x + mlp_apply(cfg, p["mlp"], norm_apply(cfg, p["ln2"], x))
+    return x, new_cache

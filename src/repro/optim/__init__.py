@@ -1,0 +1,2 @@
+from repro.optim import adam, sgd  # noqa: F401
+from repro.optim.sgd import MomentumState, clip_by_global_norm  # noqa: F401

@@ -1,0 +1,59 @@
+"""AdamW (beyond-paper option) with a SpecTrain-compatible prediction hook.
+
+The paper's prediction (Eq. 4) is exact for momentum SGD.  For Adam the
+analogous predicted displacement per step is the preconditioned first
+moment: Ŵ_{t+s} ≈ W_t − s·η·m̂/(√v̂+ε).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    m: Any
+    v: Any
+    count: jnp.ndarray
+
+
+def init(params) -> AdamState:
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamState(m=jax.tree.map(z, params), v=jax.tree.map(z, params),
+                     count=jnp.zeros((), jnp.int32))
+
+
+def update(params, state: AdamState, grads, *, lr, b1=0.9, b2=0.999,
+           eps=1e-8, weight_decay=0.0) -> Tuple[Any, AdamState]:
+    c = state.count + 1
+    cf = c.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** cf
+    bc2 = 1.0 - b2 ** cf
+
+    def upd(p, m, v, g):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * jnp.square(gf)
+        step = lr * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        p2 = p.astype(jnp.float32) - step - lr * weight_decay * p.astype(jnp.float32)
+        return p2.astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_g = treedef.flatten_up_to(grads)
+    out = [upd(p, m, v, g) for p, m, v, g in zip(flat_p, flat_m, flat_v, flat_g)]
+    return (treedef.unflatten([o[0] for o in out]),
+            AdamState(treedef.unflatten([o[1] for o in out]),
+                      treedef.unflatten([o[2] for o in out]), c))
+
+
+def predict(params, state: AdamState, *, lr, s, eps=1e-8):
+    s = jnp.asarray(s, jnp.float32)
+
+    def leaf(p, m, v):
+        disp = m / (jnp.sqrt(v) + eps)
+        return (p.astype(jnp.float32) - s * lr * disp).astype(p.dtype)
+
+    return jax.tree.map(leaf, params, state.m, state.v)

@@ -1,0 +1,53 @@
+"""Momentum SGD exactly as the paper uses it (§3.2, Eq. 1):
+
+  v_t     = γ·v_{t−1} + (1−γ)·g_t
+  W_{t+1} = W_t − η·v_t
+
+Momentum lives in fp32 regardless of param dtype (mixed-precision master
+update happens in fp32 and is cast back).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MomentumState(NamedTuple):
+    v: Any                      # smoothed gradient, fp32
+
+
+def init(params) -> MomentumState:
+    return MomentumState(
+        v=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def update(params, state: MomentumState, grads, *, lr, gamma: float = 0.9
+           ) -> Tuple[Any, MomentumState]:
+    lr = jnp.asarray(lr, jnp.float32)
+
+    def upd(p, v, g):
+        v2 = gamma * v + (1.0 - gamma) * g.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * v2
+        return p2.astype(p.dtype), v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_g = treedef.flatten_up_to(grads)
+    out = [upd(p, v, g) for p, v, g in zip(flat_p, flat_v, flat_g)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    return new_p, MomentumState(new_v)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (n + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), n

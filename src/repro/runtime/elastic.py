@@ -1,0 +1,66 @@
+"""Elastic scaling: reshard a training state across mesh plans.
+
+Grow/shrink the data axis, or re-factor the model axis into a different
+(pipe, tensor) split: stage-stacked parameters [S, L/S, ...] are restacked
+to [S', L/S', ...] (same flattened layer order), optimizer state follows,
+and in-flight pipeline rings are re-initialized (the ≤2(S−1) in-flight
+microbatches are dropped — an elastic event costs one pipeline refill,
+which is the industry-standard trade).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def restack_stages(stages: Any, new_pipe: int) -> Any:
+    """[S, Lps, ...] -> [S', L/S', ...] preserving flat layer order."""
+    def leaf(a):
+        total = a.shape[0] * a.shape[1]
+        if total % new_pipe:
+            raise ValueError(f"{total} layers not divisible by {new_pipe}")
+        return a.reshape((new_pipe, total // new_pipe) + a.shape[2:])
+
+    return jax.tree.map(leaf, stages)
+
+
+def reshard_params(params: Dict[str, Any], *, new_pipe: int,
+                   old_pipe: Optional[int] = None) -> Dict[str, Any]:
+    out = dict(params)
+    stages = dict(params["stages"])
+    if "layers" in stages:
+        stages["layers"] = restack_stages(
+            {"x": stages["layers"]}, new_pipe)["x"]
+    # per-stage shared blocks (zamba2) replicate/slice to the new count
+    if "shared" in stages:
+        def leaf(a):
+            reps = (new_pipe + a.shape[0] - 1) // a.shape[0]
+            return jnp.tile(a, (reps,) + (1,) * (a.ndim - 1))[:new_pipe]
+        stages["shared"] = jax.tree.map(leaf, stages["shared"])
+    out["stages"] = stages
+    return out
+
+
+def elastic_restate(model_old, model_new, state: Dict[str, Any],
+                    batch_sds, *, mode: str = "spectrain",
+                    ticks_per_step: int = 1) -> Dict[str, Any]:
+    """Full state transition between two Model instances (new mesh plan)."""
+    from repro.core import pipeline_stream
+    params = reshard_params(state["params"],
+                            new_pipe=model_new.n_stages,
+                            old_pipe=model_old.n_stages)
+    new_state = pipeline_stream.make_state(
+        model_new, params, batch_sds, mode=mode,
+        ticks_per_step=ticks_per_step)
+    # momentum carries over (same restack), so prediction stays warm
+    mom = dict(state["momentum"])
+    mom_stages = dict(mom["stages"]) if isinstance(mom.get("stages"), dict) \
+        else mom["stages"]
+    new_mom = {"outer": mom["outer"],
+               "stages": reshard_params({"stages": mom["stages"]},
+                                        new_pipe=model_new.n_stages)["stages"]}
+    new_state["momentum"] = new_mom
+    new_state["step"] = state["step"]
+    return new_state

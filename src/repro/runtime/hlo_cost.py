@@ -1,0 +1,316 @@
+"""Trip-count-aware cost model over compiled HLO text.
+
+``compiled.cost_analysis()`` on the CPU backend counts each while-loop
+body ONCE (verified: scan of N steps reports 1/N of the true FLOPs), and
+naive text-grep for collectives has the same flaw.  This module parses the
+compiled module into computations, walks the call graph (fusion / call /
+while with ``known_trip_count``), and accumulates
+
+  * flops        — dot (2·M·N·K from operand shapes + contracting dims),
+                   elementwise/convert/reduce approximations
+  * bytes        — operand+result bytes at fusion boundaries (XLA-style)
+  * collectives  — count / result bytes / ring-model wire bytes per kind
+
+with the correct loop multiplicities.  This is the basis of the roofline
+terms in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+                "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+                "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+                "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([^\s=]+)\s*=\s*(\(.*?\)|[a-z][a-z0-9]*\[[0-9,]*\]\S*)\s+"
+    r"([a-z][a-z0-9_-]*)\((.*)$")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([^\s(]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body)=%?([^\s,)]+)")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n["\s:]+(\d+)')
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+
+def _shape_info(txt: str) -> Tuple[int, int]:
+    """(total elements, total bytes) across every array shape in txt."""
+    elems = 0
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+@dataclass
+class Instr:
+    name: str
+    rtype: str
+    opcode: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    table: Dict[str, str] = field(default_factory=dict)  # name -> result type
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0          # raw: every op's operands+result
+    bytes_fused: float = 0.0    # TPU estimate: elementwise assumed fused
+    transcendentals: float = 0.0
+    coll: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_fused += other.bytes_fused * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.coll.items():
+            d = self.coll.setdefault(
+                k, {"count": 0.0, "result_bytes": 0.0, "wire_bytes": 0.0})
+            for kk in d:
+                d[kk] += v[kk] * mult
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(v["wire_bytes"] for v in self.coll.values())
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _HEADER_RE.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                if line.startswith("ENTRY"):
+                    cur.name = "__entry__"
+                comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ins = Instr(*m.groups())
+            cur.instrs.append(ins)
+            cur.table[ins.name] = ins.rtype
+    return comps
+
+
+def _operands(rest: str) -> List[str]:
+    """Names of %operands up to the closing paren of the op call."""
+    out = []
+    depth = 1
+    for tok in re.finditer(r"[()]|%[^\s,()]+", rest):
+        t = tok.group(0)
+        if t == "(":
+            depth += 1
+        elif t == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        elif depth >= 1:
+            out.append(t[1:])
+    return out
+
+
+_ELEMENTWISE_FLOP = {
+    "add": 1, "subtract": 1, "multiply": 1, "divide": 1, "negate": 1,
+    "maximum": 1, "minimum": 1, "abs": 1, "compare": 1, "select": 1,
+    "and": 1, "or": 1, "xor": 1, "not": 1, "clamp": 2, "floor": 1,
+    "ceil": 1, "round-nearest-afz": 1, "sign": 1, "remainder": 1,
+    "shift-left": 1, "shift-right-logical": 1, "shift-right-arithmetic": 1,
+    "power": 1, "atan2": 1, "is-finite": 1, "popcnt": 1,
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "logistic",
+                   "sine", "cosine", "cbrt", "erf", "exponential-minus-one",
+                   "log-plus-one", "tan"}
+
+
+def _group_size(rest: str, default: int = 2) -> int:
+    g = _GROUPS_RE.search(rest)
+    if g:
+        return len(g.group(1).split(","))
+    g2 = _GROUPS_IOTA_RE.search(rest)
+    if g2:
+        return int(g2.group(2))
+    return default
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self._memo: Dict[str, Cost] = {}
+
+    def entry_cost(self) -> Cost:
+        if "__entry__" not in self.comps:
+            raise ValueError("no ENTRY computation found")
+        return self.comp_cost("__entry__")
+
+    # ------------------------------------------------------------------
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        cost = Cost()
+        self._memo[name] = cost  # cycle guard
+        if comp is None:
+            return cost
+        for ins in comp.instrs:
+            cost.add(self._instr_cost(comp, ins))
+        return cost
+
+    # ------------------------------------------------------------------
+    def _instr_cost(self, comp: Computation, ins: Instr) -> Cost:
+        c = Cost()
+        op = ins.opcode
+        _, rbytes = _shape_info(ins.rtype)
+        relems, _ = _shape_info(ins.rtype)
+
+        if op in ("parameter", "constant", "tuple", "get-tuple-element",
+                  "bitcast", "after-all", "partition-id", "replica-id",
+                  "iota", "rng-bit-generator", "domain",
+                  "opt-barrier", "add-dependency"):
+            return c
+
+        # ---- collectives -------------------------------------------------
+        base = op.replace("-start", "")
+        if base in COLLECTIVE_OPS:
+            if op.endswith("-done"):
+                return c
+            n = _group_size(ins.rest)
+            frac = (n - 1) / max(n, 1)
+            if base == "all-gather":
+                wire = rbytes * frac
+            elif base == "all-reduce":
+                wire = 2.0 * rbytes * frac
+            elif base == "reduce-scatter":
+                wire = rbytes * (n - 1)
+            elif base == "all-to-all":
+                wire = rbytes * frac
+            else:
+                wire = rbytes
+            c.coll[base] = {"count": 1.0, "result_bytes": float(rbytes),
+                            "wire_bytes": float(wire)}
+            c.bytes += 2.0 * rbytes
+            c.bytes_fused += 2.0 * rbytes
+            return c
+
+        # ---- control flow / calls -----------------------------------------
+        if op == "while":
+            m = _CALL_ATTR_RE.search(ins.rest)
+            trips = 1
+            tm = _TRIP_RE.search(ins.rest)
+            if tm:
+                trips = int(tm.group(1))
+            if m:
+                c.add(self.comp_cost(m.group(1)), mult=trips)
+            return c
+        if op in ("call", "fusion", "conditional", "custom-call",
+                  "async-start"):
+            # boundary bytes: operands + result
+            ob = 0
+            for o in _operands(ins.rest):
+                t = comp.table.get(o)
+                if t:
+                    ob += _shape_info(t)[1]
+            c.bytes += ob + rbytes
+            c.bytes_fused += ob + rbytes
+            for m in _CALL_ATTR_RE.finditer(ins.rest):
+                sub = self.comp_cost(m.group(1))
+                c.flops += sub.flops
+                c.transcendentals += sub.transcendentals
+                for k, v in sub.coll.items():
+                    d = c.coll.setdefault(
+                        k, {"count": 0.0, "result_bytes": 0.0,
+                            "wire_bytes": 0.0})
+                    for kk in d:
+                        d[kk] += v[kk]
+            return c
+
+        # ---- dot ----------------------------------------------------------
+        if op == "dot":
+            ops = _operands(ins.rest)
+            lhs_t = comp.table.get(ops[0]) if ops else None
+            k = 1
+            if lhs_t:
+                dims_m = _SHAPE_RE.search(lhs_t)
+                cd = _CDIMS_RE.search(ins.rest)
+                if dims_m and cd and cd.group(1):
+                    dims = [int(d) for d in dims_m.group(2).split(",")
+                            ] if dims_m.group(2) else []
+                    for i in (int(x) for x in cd.group(1).split(",")):
+                        if i < len(dims):
+                            k *= dims[i]
+            c.flops += 2.0 * relems * k
+            ob = sum(_shape_info(comp.table.get(o, ""))[1]
+                     for o in _operands(ins.rest))
+            c.bytes += ob + rbytes
+            c.bytes_fused += ob + rbytes
+            return c
+
+        if op == "convolution":
+            c.flops += 2.0 * relems  # no convs in this codebase; nominal
+            c.bytes += 2.0 * rbytes
+            c.bytes_fused += 2.0 * rbytes
+            return c
+
+        # ---- everything else: elementwise-ish -------------------------------
+        if op in _TRANSCENDENTAL:
+            c.transcendentals += relems
+            c.flops += relems
+        elif op in ("reduce", "reduce-window"):
+            ops = _operands(ins.rest)
+            ob = sum(_shape_info(comp.table.get(o, ""))[1]
+                     for o in ops[:max(1, len(ops) // 2)])
+            c.flops += _shape_info(comp.table.get(ops[0], ""))[0] if ops else 0
+            c.bytes += ob + rbytes
+            c.bytes_fused += ob + rbytes
+            return c
+        else:
+            c.flops += relems * _ELEMENTWISE_FLOP.get(op, 1)
+        ob = sum(_shape_info(comp.table.get(o, ""))[1]
+                 for o in _operands(ins.rest))
+        c.bytes += ob + rbytes
+        # TPU-fusion estimate: layout/elementwise ops fuse into neighbours;
+        # real HBM movers are copies and dynamic (update-)slices / gathers.
+        if op in ("copy", "copy-start", "dynamic-slice",
+                  "dynamic-update-slice", "gather", "scatter", "sort",
+                  "select-and-scatter", "transpose"):
+            c.bytes_fused += ob + rbytes
+        return c
+
+
+def analyze(text: str) -> Dict[str, object]:
+    cost = HloCost(text).entry_cost()
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "bytes_fused": cost.bytes_fused,
+        "transcendentals": cost.transcendentals,
+        "collectives": cost.coll,
+        "wire_bytes": cost.wire_bytes,
+    }

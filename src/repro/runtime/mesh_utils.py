@@ -1,0 +1,30 @@
+"""Logical mesh refinement.
+
+The physical production mesh is (data=16, model=16) per pod
+(launch/mesh.py).  Each arch factors the 16-way ``model`` axis into
+(pipe, tensor) with a per-arch role for ``pipe`` (pipeline stage vs
+context parallelism).  This module reshapes the same devices into the
+logical mesh the runtime uses.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+from jax.sharding import Mesh
+
+
+def refine_mesh(mesh: Mesh, pipe: int, tensor: int) -> Mesh:
+    """(pod?, data, model) -> (pod?, data, pipe, tensor)."""
+    names = mesh.axis_names
+    devs = np.asarray(mesh.devices)
+    model = devs.shape[-1]
+    if pipe * tensor != model:
+        raise ValueError(f"pipe*tensor={pipe * tensor} != model={model}")
+    new_shape = devs.shape[:-1] + (pipe, tensor)
+    new_names = tuple(names[:-1]) + ("pipe", "tensor")
+    return Mesh(devs.reshape(new_shape), new_names)
+
+
+def axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, np.asarray(mesh.devices).shape))

@@ -1,0 +1,228 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter leaf carries a tuple of logical axis names (from its
+ParamSpec); every activation constraint site names logical axes.  A
+per-arch rule table maps logical axes -> mesh axes; spec construction
+drops any assignment that does not divide the dimension or that would
+reuse a mesh axis already consumed by an earlier dim of the same leaf.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.runtime.mesh_utils import axis_sizes
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+def logical_rules(cfg: ArchConfig, mesh: Mesh, *,
+                  zero1: bool = True) -> Dict[str, AxisVal]:
+    plan = cfg.mesh_plan
+    sizes = axis_sizes(mesh)
+    has_pod = "pod" in sizes
+    tensor = sizes.get("tensor", 1)
+    batch: AxisVal = ("pod", "data") if has_pod else ("data",)
+
+    rules: Dict[str, AxisVal] = {
+        # --- params -------------------------------------------------------
+        "stage": "pipe" if plan.pipe_role == "stage" else None,
+        "layer": None,
+        "embed": "data" if plan.fsdp else None,
+        "embed2": None,
+        "heads": "tensor" if cfg.n_heads % tensor == 0 else None,
+        "kv": "tensor" if (cfg.n_kv_heads % tensor == 0) else None,
+        "mlp": "tensor" if cfg.d_ff % tensor == 0 else None,
+        "vocab": "tensor",
+        "expert": "tensor",
+        "ssm": "tensor",
+        # --- activations ----------------------------------------------------
+        "act_batch": batch,
+        "act_seq": "pipe" if plan.pipe_role == "context" else None,
+        # --- decode caches ----------------------------------------------------
+        "act_kvseq": None,
+        "head_dim": None,
+        "state": None,
+    }
+    if cfg.moe is not None and cfg.moe.num_experts % tensor != 0:
+        rules["expert"] = None
+    return rules
+
+
+def decode_rules(cfg: ArchConfig, mesh: Mesh, *, global_batch: int
+                 ) -> Dict[str, AxisVal]:
+    """Rules for serve_step cells.  When the request batch cannot occupy the
+    data axis (long-context B=1), shard the KV-cache sequence dim over it
+    instead (context-parallel cache)."""
+    rules = logical_rules(cfg, mesh)
+    sizes = axis_sizes(mesh)
+    d_sz = sizes.get("data", 1)
+    pod = sizes.get("pod", 1)
+    if global_batch % (d_sz * pod) != 0:
+        rules["act_batch"] = None
+        rules["act_kvseq"] = "data"
+    # decode has seq len 1 — never context-shard activations
+    rules["act_seq"] = None
+    return rules
+
+
+def _resolve(axis: Optional[str], rules: Dict[str, AxisVal]) -> AxisVal:
+    if axis is None:
+        return None
+    return rules.get(axis)
+
+
+def spec_for_leaf(axes: Sequence[Optional[str]], shape: Sequence[int],
+                  rules: Dict[str, AxisVal], sizes: Dict[str, int]) -> P:
+    used: set = set()
+    out = []
+    for ax, dim in zip(axes, shape):
+        val = _resolve(ax, rules)
+        if val is None:
+            out.append(None)
+            continue
+        names = (val,) if isinstance(val, str) else tuple(val)
+        names = tuple(n for n in names if n in sizes and n not in used)
+        prod = int(np.prod([sizes[n] for n in names])) if names else 1
+        if not names or prod == 1 or dim % prod != 0:
+            out.append(None)
+            continue
+        used.update(names)
+        out.append(names[0] if len(names) == 1 else names)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shardings_for(axes_tree: Any, sds_tree: Any, mesh: Mesh,
+                  rules: Dict[str, AxisVal]):
+    """NamedSharding pytree for (axes, ShapeDtypeStruct) trees."""
+    sizes = axis_sizes(mesh)
+
+    def leaf(axes, sds):
+        return NamedSharding(mesh, spec_for_leaf(axes, sds.shape, rules, sizes))
+
+    return jax.tree.map(leaf, axes_tree, sds_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(a, (str, type(None))) for a in x))
+
+
+def momentum_rules(cfg: ArchConfig, rules: Dict[str, AxisVal],
+                   mesh: Mesh) -> Dict[str, AxisVal]:
+    """ZeRO-1: momentum additionally sharded over the data axis on the
+    first shardable (so far unsharded) dim — realized by remapping the
+    'embed' logical axis of optimizer-state leaves to 'data'."""
+    r = dict(rules)
+    if r.get("embed") is None:
+        r["embed"] = "data"
+    return r
+
+
+# rings sharded over tensor on the embed dim by default; dryrun
+# --no-ring-tp flips this (replicate rings: more memory, fewer gathers)
+_RING_TP = True
+
+
+def stream_state_shardings(model, state_sds: Dict[str, Any], mesh: Mesh,
+                           rules: Dict[str, AxisVal], *, zero1: bool = True):
+    """NamedShardings for the streaming (or sync) train state."""
+    sizes = axis_sizes(mesh)
+    param_axes = model.param_axes()
+    act_rules = dict(rules)
+    act_rules["act_embed"] = "tensor" if _RING_TP else None
+    rep = NamedSharding(mesh, P())
+
+    def by_axes(axes, sds, r):
+        return NamedSharding(mesh, spec_for_leaf(axes, sds.shape, r, sizes))
+
+    out: Dict[str, Any] = {
+        "params": shardings_for(param_axes, state_sds["params"], mesh, rules),
+        "momentum": shardings_for(
+            param_axes, state_sds["momentum"], mesh,
+            momentum_rules(None, rules, mesh) if zero1 else rules),
+        "step": rep,
+    }
+    ring_axes = {
+        "fwd_buf": ("stage", "act_batch", None, "act_embed"),
+        "bwd_buf": ("stage", "act_batch", None, "act_embed"),
+        "stash_x": ("stage", None, "act_batch", None, "act_embed"),
+    }
+    for k, axes in ring_axes.items():
+        if k in state_sds:
+            out[k] = by_axes(axes, state_sds[k], act_rules)
+    if "tick" in state_sds:
+        out["tick"] = rep
+    if "pred" in state_sds:
+        out["pred"] = {
+            k: shardings_for(param_axes[k], state_sds["pred"][k], mesh,
+                             rules)
+            for k in state_sds["pred"]
+        }
+    if "batch_ring" in state_sds:
+        out["batch_ring"] = jax.tree.map(
+            lambda s: by_axes((None, "act_batch") + (None,) * (len(s.shape) - 2),
+                              s, act_rules),
+            state_sds["batch_ring"])
+    if "w_stash" in state_sds:
+        stash_rules = dict(rules)
+        out["w_stash"] = jax.tree.map(
+            lambda ax, s: by_axes((ax[0], None) + tuple(ax[1:]), s,
+                                  stash_rules),
+            param_axes["stages"] if isinstance(param_axes, dict) else param_axes,
+            state_sds["w_stash"],
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(a, (str, type(None))) for a in x))
+    return out
+
+
+def batch_specs(cfg: ArchConfig, batch_sds: Dict[str, Any], mesh: Mesh,
+                rules: Dict[str, AxisVal]):
+    """Shardings for a data batch: leading dim batch, second seq."""
+    sizes = axis_sizes(mesh)
+
+    def leaf(sds):
+        axes = ["act_batch", "act_seq"] + [None] * (len(sds.shape) - 2)
+        return NamedSharding(mesh,
+                             spec_for_leaf(axes, sds.shape, rules, sizes))
+
+    return jax.tree.map(leaf, batch_sds)
+
+
+def cache_specs(cfg: ArchConfig, cache_sds: Any, mesh: Mesh,
+                rules: Dict[str, AxisVal]):
+    """Decode caches: [L, b, s, kv, hd] / states [L, b, h, ...].
+
+    Heuristic: dim0 layer-stacked -> None; dim1 batch; trailing dims: shard
+    the kv/head dim over tensor when divisible, seq over data for
+    long-context (batch tiny) when batch cannot use it.
+    """
+    sizes = axis_sizes(mesh)
+    d_sz = sizes.get("data", 1)
+    t_sz = sizes.get("tensor", 1)
+    bt = rules.get("act_batch") or ("data",)
+    bt = (bt,) if isinstance(bt, str) else tuple(bt)
+
+    def leaf(sds):
+        shp = sds.shape
+        spec: list = [None] * len(shp)
+        if len(shp) >= 2:
+            bprod = int(np.prod([sizes[n] for n in bt if n in sizes]))
+            if shp[1] % bprod == 0 and bprod > 1:
+                spec[1] = bt[0] if len(bt) == 1 else bt
+            elif len(shp) >= 3 and shp[2] % d_sz == 0:
+                spec[2] = "data"   # shard seq/cache length instead
+        # shard a heads-like dim over tensor (last-2 preferred)
+        for i in range(len(shp) - 1, 1, -1):
+            if spec[i] is None and shp[i] % t_sz == 0 and t_sz > 1 and \
+                    shp[i] >= t_sz and i >= 2:
+                spec[i] = "tensor"
+                break
+        while spec and spec[-1] is None:
+            spec.pop()
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, cache_sds)

@@ -1,0 +1,51 @@
+"""Dry-run smoke: lower+compile on a tiny forced-device mesh in a
+subprocess (so the 512-device XLA flag can't leak into this process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_cell(arch, shape, extra=()):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--smoke", *extra],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    recs = [json.loads(l) for l in out.stdout.splitlines()
+            if l.startswith("{")]
+    assert recs, out.stdout
+    return recs[0]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("granite-8b", "train_4k"),
+    ("deepseek-moe-16b", "train_4k"),
+    ("rwkv6-7b", "decode_32k"),
+])
+def test_smoke_cells_compile(arch, shape):
+    rec = run_cell(arch, shape)
+    assert rec["status"] == "ok", rec
+    assert rec["cost"]["flops"] > 0
+    assert rec["terms"]["compute_s"] > 0
+    assert rec["dominant"] in ("compute_s", "memory_s", "collective_s")
+
+
+@pytest.mark.slow
+def test_sync_runtime_compiles():
+    rec = run_cell("granite-8b", "train_4k", ("--runtime", "sync"))
+    assert rec["status"] == "ok", rec
+
+
+@pytest.mark.slow
+def test_skip_rule_applies():
+    rec = run_cell("granite-8b", "long_500k")
+    assert rec["status"] == "skip"
+    assert "full-attention" in rec["skip_reason"]

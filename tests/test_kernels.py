@@ -1,0 +1,197 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles: shape/dtype
+sweeps per the deliverable."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def tr(t):
+    return jnp.swapaxes(t, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+
+
+FLASH_CASES = [
+    # b, H, KV, sq, sk, d, causal, dtype
+    (2, 4, 4, 256, 256, 64, True, jnp.float32),
+    (1, 8, 2, 256, 256, 128, True, jnp.float32),
+    (2, 4, 1, 128, 256, 64, False, jnp.float32),
+    (1, 4, 4, 128, 128, 64, True, jnp.bfloat16),
+    (1, 2, 2, 512, 512, 32, True, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_fwd(case):
+    b, H, KV, sq, sk, d, causal, dt = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, sq, H, d)).astype(dt)
+    k = jax.random.normal(ks[1], (b, sk, KV, d)).astype(dt)
+    v = jax.random.normal(ks[2], (b, sk, KV, d)).astype(dt)
+    o = ops.flash_attention(q, k, v, causal, 128, 128, True)
+    o_ref = tr(ref.attention_ref(tr(q), tr(k), tr(v), causal=causal))
+    tol = 2e-5 if dt == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_flash_bwd():
+    b, H, KV, s, d = 1, 4, 2, 128, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, s, H, d))
+    k = jax.random.normal(ks[1], (b, s, KV, d))
+    v = jax.random.normal(ks[2], (b, s, KV, d))
+    f1 = lambda *a: jnp.sum(jnp.sin(ops.flash_attention(
+        *a, True, 64, 64, True)))
+    f2 = lambda q, k, v: jnp.sum(jnp.sin(tr(ref.attention_ref(
+        tr(q), tr(k), tr(v), causal=True))))
+    g1 = jax.grad(f1, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, (0, 1, 2))(q, k, v)
+    for a, b_, nm in zip(g1, g2, "qkv"):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=2e-5, rtol=1e-3, err_msg=nm)
+
+
+def test_flash_block_shape_invariance():
+    b, H, s, d = 1, 2, 256, 32
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (b, s, H, d))
+    k = jax.random.normal(ks[1], (b, s, H, d))
+    v = jax.random.normal(ks[2], (b, s, H, d))
+    o1 = ops.flash_attention(q, k, v, True, 64, 64, True)
+    o2 = ops.flash_attention(q, k, v, True, 128, 32, True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5,
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+
+
+RWKV_CASES = [
+    (2, 3, 128, 32, 16),
+    (1, 2, 64, 64, 32),
+    (1, 1, 96, 16, 32),
+]
+
+
+@pytest.mark.parametrize("case", RWKV_CASES)
+def test_rwkv6_scan(case):
+    b, h, s, hd, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    r = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd)) * 0.3
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (b, s, h, hd)) * 0.5
+                         - 0.5))
+    u = jax.random.normal(ks[4], (h, hd)) * 0.3
+    S0 = jax.random.normal(ks[5], (b, h, hd, hd)) * 0.1
+    y, sT = ops.rwkv6_scan(r, k, v, w, u, S0, chunk=chunk, interpret=True)
+    y_ref, sT_ref = ref.rwkv6_ref(tr(r), tr(k), tr(v), tr(w), u, S0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(tr(y_ref)),
+                               atol=5e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_ref),
+                               atol=5e-3, rtol=1e-3)
+
+
+def test_rwkv6_state_continuity():
+    """Running two half-sequences with carried state == one full run."""
+    b, h, s, hd = 1, 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    r = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd)) * 0.3
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (b, s, h, hd)) * 0.3))
+    u = jax.random.normal(ks[4], (h, hd)) * 0.3
+    S0 = jnp.zeros((b, h, hd, hd))
+    y_full, sT_full = ops.rwkv6_scan(r, k, v, w, u, S0, chunk=16,
+                                     interpret=True)
+    half = s // 2
+    y1, s1 = ops.rwkv6_scan(r[:, :half], k[:, :half], v[:, :half],
+                            w[:, :half], u, S0, chunk=16, interpret=True)
+    y2, s2 = ops.rwkv6_scan(r[:, half:], k[:, half:], v[:, half:],
+                            w[:, half:], u, s1, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=5e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(sT_full),
+                               atol=5e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# mamba2
+
+
+MAMBA_CASES = [
+    (2, 4, 128, 16, 8, 2, 16),
+    (1, 2, 64, 32, 16, 1, 32),
+]
+
+
+@pytest.mark.parametrize("case", MAMBA_CASES)
+def test_mamba2_scan(case):
+    b, h, s, p, n, g, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    decay = jnp.exp(-dt * jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3))
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    S0 = jnp.zeros((b, h, p, n))
+    y, sT = ops.mamba2_scan(x, dt, decay, B, C, S0, chunk=chunk,
+                            interpret=True)
+    rep = h // g
+    Bh, Ch = (jnp.repeat(t, rep, axis=2) for t in (B, C))
+    y_ref, sT_ref = ref.mamba2_ref(tr(x), jnp.moveaxis(dt, 1, 2),
+                                   jnp.moveaxis(decay, 1, 2),
+                                   tr(Bh), tr(Ch), S0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(tr(y_ref)),
+                               atol=5e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_ref),
+                               atol=5e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fused SpecTrain update
+
+
+@pytest.mark.parametrize("shape,dt", [((1000, 37), jnp.float32),
+                                      ((8192,), jnp.float32),
+                                      ((63,), jnp.float32),
+                                      ((512, 16), jnp.bfloat16)])
+def test_fused_update(shape, dt):
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    w = jax.random.normal(ks[0], shape).astype(dt)
+    v = jax.random.normal(ks[1], shape)
+    g = jax.random.normal(ks[2], shape).astype(dt)
+    got = ops.fused_update(w, v, g, lr=0.1, gamma=0.9, s=3.0, block=4096,
+                           interpret=True)
+    exp = ref.fused_update_ref(w, v, g, lr=0.1, gamma=0.9, s=3.0)
+    for a, b, nm in zip(got, exp, ("w", "v", "what")):
+        tol = 1e-6 if dt == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=tol,
+                                   rtol=tol, err_msg=nm)
+
+
+def test_fused_update_matches_optimizer():
+    """The kernel must agree with optim.sgd + spectrain.predict_weights."""
+    from repro.core import spectrain as st
+    from repro.optim import sgd
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    w = jax.random.normal(ks[0], (256,))
+    v = jax.random.normal(ks[1], (256,))
+    g = jax.random.normal(ks[2], (256,))
+    w2, v2, wh = ops.fused_update(w, v, g, lr=0.05, gamma=0.9, s=4.0,
+                                  interpret=True)
+    p2, m2 = sgd.update(w, sgd.MomentumState(v), g, lr=0.05, gamma=0.9)
+    pred = st.predict_weights(p2, m2.v, 0.05, 4.0)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(p2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(m2.v), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(wh), np.asarray(pred), rtol=1e-5,
+                               atol=1e-6)

@@ -1,0 +1,104 @@
+"""Optimizers + gradient compression properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adam, compression, sgd
+
+
+class TestMomentumSGD:
+    def test_closed_form_eq1_eq2(self):
+        w = jnp.asarray([1.0, 2.0])
+        v = jnp.asarray([0.5, -0.5])
+        g = jnp.asarray([1.0, 1.0])
+        p2, m2 = sgd.update(w, sgd.MomentumState(v), g, lr=0.1, gamma=0.9)
+        v_exp = 0.9 * v + 0.1 * g
+        np.testing.assert_allclose(np.asarray(m2.v), np.asarray(v_exp))
+        np.testing.assert_allclose(np.asarray(p2),
+                                   np.asarray(w - 0.1 * v_exp))
+
+    def test_momentum_fp32_under_bf16_params(self):
+        w = jnp.ones((4,), jnp.bfloat16)
+        state = sgd.init(w)
+        assert state.v.dtype == jnp.float32
+        p2, m2 = sgd.update(w, state, jnp.ones((4,), jnp.bfloat16), lr=0.1)
+        assert p2.dtype == jnp.bfloat16 and m2.v.dtype == jnp.float32
+
+    def test_clip(self):
+        g = {"a": jnp.full((4,), 10.0)}
+        clipped, n = sgd.clip_by_global_norm(g, 1.0)
+        assert float(n) == pytest.approx(20.0)
+        assert float(sgd.global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+
+    def test_clip_noop_below_threshold(self):
+        g = {"a": jnp.full((4,), 0.1)}
+        clipped, _ = sgd.clip_by_global_norm(g, 10.0)
+        np.testing.assert_allclose(np.asarray(clipped["a"]),
+                                   np.asarray(g["a"]))
+
+
+class TestAdam:
+    def test_descends_quadratic(self):
+        w = jnp.asarray([5.0, -3.0])
+        state = adam.init(w)
+        for _ in range(200):
+            g = 2 * w
+            w, state = adam.update(w, state, g, lr=0.1)
+        assert float(jnp.max(jnp.abs(w))) < 0.1
+
+    def test_predict_direction(self):
+        w = jnp.asarray([1.0])
+        state = adam.init(w)
+        for _ in range(10):
+            w, state = adam.update(w, state, jnp.asarray([1.0]), lr=0.01)
+        pred = adam.predict(w, state, lr=0.01, s=5)
+        assert float(pred[0]) < float(w[0])  # keeps moving downhill
+
+
+class TestCompression:
+    def test_topk_keeps_largest(self):
+        g = {"a": jnp.asarray([0.1, -5.0, 0.2, 3.0])}
+        res = compression.topk_init(g)
+        sent, res2, stats = compression.topk_compress(g, res, frac=0.5)
+        np.testing.assert_allclose(np.asarray(sent["a"]),
+                                   np.asarray([0.0, -5.0, 0.0, 3.0]))
+        np.testing.assert_allclose(np.asarray(res2["a"]),
+                                   np.asarray([0.1, 0.0, 0.2, 0.0]))
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 100), frac=st.sampled_from([0.1, 0.25, 0.5]))
+    def test_error_feedback_telescopes(self, seed, frac):
+        """sum(sent) + final residual == sum(grads): nothing is lost."""
+        key = jax.random.PRNGKey(seed)
+        res = {"a": jnp.zeros((32,))}
+        total_sent = jnp.zeros((32,))
+        total_g = jnp.zeros((32,))
+        for i in range(5):
+            key, k = jax.random.split(key)
+            g = {"a": jax.random.normal(k, (32,))}
+            total_g = total_g + g["a"]
+            sent, res, _ = compression.topk_compress(g, res, frac=frac)
+            total_sent = total_sent + sent["a"]
+        np.testing.assert_allclose(np.asarray(total_sent + res["a"]),
+                                   np.asarray(total_g), atol=1e-5)
+
+    def test_int8_unbiased(self):
+        key = jax.random.PRNGKey(0)
+        g = {"a": jax.random.normal(key, (64,))}
+        acc = jnp.zeros((64,))
+        n = 200
+        for i in range(n):
+            out = compression.int8_roundtrip(g, jax.random.PRNGKey(i))
+            acc = acc + out["a"]
+        err = float(jnp.max(jnp.abs(acc / n - g["a"])))
+        scale = float(jnp.max(jnp.abs(g["a"]))) / 127
+        assert err < 3 * scale  # stochastic rounding is unbiased
+
+    def test_int8_bounded_error(self):
+        key = jax.random.PRNGKey(1)
+        g = {"a": jax.random.normal(key, (128,))}
+        out = compression.int8_roundtrip(g, key)
+        scale = float(jnp.max(jnp.abs(g["a"]))) / 127
+        assert float(jnp.max(jnp.abs(out["a"] - g["a"]))) <= scale + 1e-6

@@ -1,0 +1,78 @@
+"""Beyond-paper performance options preserve semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import lm_batch, tiny_cfg
+from repro.core import pipeline_stream
+from repro.models import Model
+
+
+def _setup(pipe=2):
+    cfg = tiny_cfg("granite-8b", n_layers=4, pipe=pipe)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = lm_batch(jax.random.PRNGKey(1), cfg, batch=4, seq=16)
+    sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                       batch)
+    return cfg, m, params, batch, sds
+
+
+class TestFusedPredict:
+    def test_identical_trajectory_in_fp32(self):
+        """fused_predict moves Eq. 4 into the update pass — exactly the
+        same math, so in fp32 the trajectories must match."""
+        cfg, m, params, batch, sds = _setup()
+        s_a = pipeline_stream.make_state(m, params, sds)
+        step_a = jax.jit(pipeline_stream.make_train_step(
+            m, mode="spectrain", lr=0.05))
+        s_b = pipeline_stream.make_state(m, params, sds,
+                                         fused_predict=True)
+        step_b = jax.jit(pipeline_stream.make_train_step(
+            m, mode="spectrain", lr=0.05, fused_predict=True))
+        for _ in range(6):
+            s_a, met_a = step_a(s_a, batch)
+            s_b, met_b = step_b(s_b, batch)
+        for a, b in zip(jax.tree.leaves(s_a["params"]),
+                        jax.tree.leaves(s_b["params"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+        assert float(met_a["loss"]) == pytest.approx(float(met_b["loss"]),
+                                                     rel=1e-5)
+
+    def test_pred_state_is_prediction(self):
+        cfg, m, params, batch, sds = _setup()
+        from repro.core import spectrain as st
+        state = pipeline_stream.make_state(m, params, sds,
+                                           fused_predict=True)
+        step = jax.jit(pipeline_stream.make_train_step(
+            m, mode="spectrain", lr=0.05, fused_predict=True))
+        state, _ = step(state, batch)
+        s_fwd = jnp.array([2.0, 0.0])
+        want = st.predict_weights_stacked(
+            state["params"]["stages"], state["momentum"]["stages"],
+            0.05, s_fwd)
+        for a, b in zip(jax.tree.leaves(state["pred"]["stages"]),
+                        jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+
+class TestBwdBf16:
+    def test_converges_and_tracks_fp32(self):
+        cfg, m, params, batch, sds = _setup()
+        losses = {}
+        for bwd in (None, "bfloat16"):
+            state = pipeline_stream.make_state(m, params, sds)
+            step = jax.jit(pipeline_stream.make_train_step(
+                m, mode="spectrain", lr=0.05, bwd_dtype=bwd))
+            ls = []
+            for _ in range(20):
+                state, met = step(state, batch)
+                if float(met["loss_valid"]):
+                    ls.append(float(met["loss"]))
+            losses[bwd or "fp32"] = ls
+        assert np.isfinite(losses["bfloat16"]).all()
+        # same descent within mixed-precision noise
+        assert abs(losses["bfloat16"][-1] - losses["fp32"][-1]) < 0.15

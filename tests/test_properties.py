@@ -1,0 +1,101 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spectrain
+from repro.models.layers import apply_rope, rope_freqs, softmax_xent
+from repro.optim import sgd
+
+
+class FakeCfg:
+    rope_theta = 10000.0
+    hd = 16
+
+
+@settings(max_examples=20, deadline=None)
+@given(s1=st.integers(0, 8), s2=st.integers(0, 8), seed=st.integers(0, 99))
+def test_prediction_additive_in_s(s1, s2, seed):
+    """Ŵ(s1+s2) = predict(predict(W, s1), s2) with frozen momentum."""
+    k = jax.random.PRNGKey(seed)
+    w = jax.random.normal(k, (16,))
+    v = jax.random.normal(jax.random.PRNGKey(seed + 1), (16,))
+    a = spectrain.predict_weights(w, v, 0.1, s1 + s2)
+    b = spectrain.predict_weights(
+        spectrain.predict_weights(w, v, 0.1, s1), v, 0.1, s2)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 99), pos=st.integers(0, 1000))
+def test_rope_preserves_norm(seed, pos):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 4, 2, 16))
+    inv = rope_freqs(FakeCfg())
+    y = apply_rope(x, jnp.full((1, 4), pos), inv)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 99))
+def test_rope_relative_position_invariance(seed):
+    """q·k after rope depends only on relative offset."""
+    k0 = jax.random.PRNGKey(seed)
+    q = jax.random.normal(k0, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 1, 1, 16))
+    inv = rope_freqs(FakeCfg())
+
+    def score(pq, pk):
+        qr = apply_rope(q, jnp.asarray([[pq]]), inv)
+        kr = apply_rope(k, jnp.asarray([[pk]]), inv)
+        return float(jnp.sum(qr * kr))
+
+    assert score(5, 3) == pytest.approx(score(105, 103), rel=1e-3,
+                                        abs=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 99), gamma=st.sampled_from([0.0, 0.5, 0.9]))
+def test_momentum_zero_gradient_decays(seed, gamma):
+    """With g=0 the momentum shrinks geometrically; weights drift bounded."""
+    v0 = jax.random.normal(jax.random.PRNGKey(seed), (8,))
+    w = jnp.zeros((8,))
+    v = v0
+    for i in range(5):
+        w, ms = sgd.update(w, sgd.MomentumState(v), jnp.zeros((8,)),
+                           lr=0.1, gamma=gamma)
+        v = ms.v
+    np.testing.assert_allclose(np.asarray(v), np.asarray(v0 * gamma ** 5),
+                               atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 99), vocab=st.sampled_from([8, 17, 64]))
+def test_xent_uniform_logits_is_log_vocab(seed, vocab):
+    logits = jnp.zeros((2, 4, vocab))
+    tgt = jax.random.randint(jax.random.PRNGKey(seed), (2, 4), 0, vocab)
+    loss = softmax_xent(logits, tgt, vocab)
+    assert float(loss) == pytest.approx(np.log(vocab), rel=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 99))
+def test_xent_perfect_prediction_near_zero(seed):
+    tgt = jax.random.randint(jax.random.PRNGKey(seed), (2, 4), 0, 16)
+    logits = 100.0 * jax.nn.one_hot(tgt, 16)
+    assert float(softmax_xent(logits, tgt, 16)) < 1e-3
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 20), n=st.sampled_from([2, 4]))
+def test_stream_version_difference_consistency(seed, n):
+    """In the stream schedule the prediction distance equals the actual
+    number of updates a microbatch waits for (2(N-1-k))."""
+    for k in range(n):
+        s = spectrain.version_difference_stream(k, n, "forward")
+        fwd_tick = k
+        bwd_tick = 2 * (n - 1) - k
+        assert s == bwd_tick - fwd_tick

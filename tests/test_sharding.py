@@ -1,0 +1,173 @@
+"""Logical-axis sharding rules, HLO cost model, MoE dispatch invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from conftest import lm_batch, tiny_cfg
+from repro.configs import get_config, list_archs
+from repro.models import Model
+from repro.runtime.sharding import spec_for_leaf
+
+
+SIZES = {"data": 16, "pipe": 4, "tensor": 4}
+RULES = {"stage": "pipe", "embed": None, "heads": "tensor",
+         "mlp": "tensor", "expert": "tensor", "vocab": "tensor",
+         "act_batch": ("data",), "layer": None}
+
+
+class TestSpecForLeaf:
+    def test_basic_mapping(self):
+        spec = spec_for_leaf(("stage", "layer", "embed", "mlp"),
+                             (4, 9, 4096, 14336), RULES, SIZES)
+        assert spec == P("pipe", None, None, "tensor")
+
+    def test_divisibility_drop(self):
+        # 14338 % 4 != 0 -> mlp assignment dropped
+        spec = spec_for_leaf(("embed", "mlp"), (4096, 14338), RULES, SIZES)
+        assert spec == P()
+
+    def test_conflict_keeps_first(self):
+        # expert and mlp both -> tensor; only the first dim gets it
+        spec = spec_for_leaf(("expert", "embed", "mlp"), (8, 4096, 32768),
+                             RULES, SIZES)
+        assert spec == P("tensor")  # trailing Nones are trimmed
+
+    def test_tuple_axis(self):
+        spec = spec_for_leaf(("act_batch", None, None), (256, 128, 64),
+                             RULES, SIZES)
+        assert spec == P("data")
+
+    def test_small_dim_replicated(self):
+        spec = spec_for_leaf(("heads",), (2,), RULES, SIZES)
+        assert spec == P()
+
+
+@pytest.mark.parametrize("name", list(list_archs()))
+def test_arch_param_specs_valid(name):
+    """Every full-size param leaf gets a consistent PartitionSpec on the
+    production logical mesh sizes (no axis reuse; divisibility holds)."""
+    from repro.configs.base import MeshPlan
+    from repro.runtime.sharding import logical_rules
+    cfg = get_config(name)
+    plan = cfg.mesh_plan
+
+    class FakeMesh:
+        axis_names = ("data", "pipe", "tensor")
+        devices = np.empty((16, plan.pipe, plan.tensor), object)
+
+    rules = logical_rules(cfg, FakeMesh())
+    m = Model(cfg)
+    axes = m.param_axes()
+    sds = m.param_sds()
+    sizes = {"data": 16, "pipe": plan.pipe, "tensor": plan.tensor}
+
+    def check(ax, leaf):
+        spec = spec_for_leaf(ax, leaf.shape, rules, sizes)
+        used = [s for s in spec if s is not None]
+        flat = []
+        for s in used:
+            flat.extend(s if isinstance(s, tuple) else (s,))
+        assert len(flat) == len(set(flat)), (ax, spec)
+        for dim, s in zip(leaf.shape, spec):
+            if s is None:
+                continue
+            names = s if isinstance(s, tuple) else (s,)
+            prod = int(np.prod([sizes[n] for n in names]))
+            assert dim % prod == 0, (ax, leaf.shape, spec)
+
+    jax.tree.map(check, axes, sds,
+                 is_leaf=lambda x: isinstance(x, tuple) and all(
+                     isinstance(a, (str, type(None))) for a in x))
+
+
+class TestHloCost:
+    def test_scan_trip_count_correction(self):
+        """The whole reason hlo_cost exists: XLA's cost_analysis counts a
+        4-iteration scan body once; ours multiplies by the trip count."""
+        from repro.runtime.hlo_cost import analyze
+        d = 128
+        w = jax.ShapeDtypeStruct((4, d, d), jnp.float32)
+        x = jax.ShapeDtypeStruct((8, d), jnp.float32)
+
+        def f(w, x):
+            def body(c, wi):
+                return jnp.tanh(c @ wi), None
+            y, _ = jax.lax.scan(body, x, w)
+            return jnp.sum(y)
+
+        comp = jax.jit(f).lower(w, x).compile()
+        r = analyze(comp.as_text())
+        dot_flops = 4 * 2 * 8 * d * d
+        assert dot_flops <= r["flops"] <= dot_flops * 1.5
+        assert r["transcendentals"] == pytest.approx(4 * 8 * d)
+
+    def test_collective_wire_model(self):
+        from repro.runtime.hlo_cost import analyze
+        txt = """
+HloModule m
+
+ENTRY %main (p: f32[64]) -> f32[64] {
+  %p = f32[64]{0} parameter(0)
+  %ar = f32[64]{0} all-reduce(%p), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %cp = f32[64]{0} collective-permute(%ar), source_target_pairs={{0,1}}
+}
+"""
+        r = analyze(txt)
+        ar = r["collectives"]["all-reduce"]
+        assert ar["count"] == 1
+        assert ar["wire_bytes"] == pytest.approx(2 * 256 * 3 / 4)
+        cp = r["collectives"]["collective-permute"]
+        assert cp["wire_bytes"] == pytest.approx(256)
+
+
+class TestMoEDispatch:
+    def test_capacity_bound_and_combine_weights(self):
+        from repro.models import moe as moe_mod
+        cfg = tiny_cfg("deepseek-moe-16b", n_layers=2, pipe=1)
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        lp = jax.tree.map(lambda a: a[0, 0],
+                          params["stages"]["layers"])
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+        out, aux = moe_mod.moe_apply(cfg, lp["moe"], x)
+        assert out.shape == x.shape
+        assert np.isfinite(np.asarray(out)).all()
+        assert float(aux) >= 0
+
+    def test_grouped_equals_ungrouped_when_no_drop(self):
+        from repro.models import moe as moe_mod
+        import dataclasses
+        cfg = tiny_cfg("grok-1-314b", n_layers=2, pipe=1)
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=8.0))
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        lp = jax.tree.map(lambda a: a[0, 0], params["stages"]["layers"])
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+        old = moe_mod.DISPATCH_GROUPS
+        try:
+            moe_mod.DISPATCH_GROUPS = 4
+            o1, a1 = moe_mod.moe_apply(cfg, lp["moe"], x)
+            moe_mod.DISPATCH_GROUPS = 1
+            o2, a2 = moe_mod.moe_apply(cfg, lp["moe"], x)
+        finally:
+            moe_mod.DISPATCH_GROUPS = old
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   atol=2e-5, rtol=1e-4)
+
+    def test_balanced_router_aux_near_coef(self):
+        """Perfectly uniform routing gives aux ~= coef (E * (1/E) * k...)"""
+        from repro.models import moe as moe_mod
+        cfg = tiny_cfg("grok-1-314b", n_layers=2, pipe=1)
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        lp = jax.tree.map(lambda a: a[0, 0], params["stages"]["layers"])
+        # zero router -> uniform probs -> aux = coef * E * sum(1/E * k/E)
+        lp["moe"]["router"] = jnp.zeros_like(lp["moe"]["router"])
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+        _, aux = moe_mod.moe_apply(cfg, lp["moe"], x)
+        E, k = cfg.moe.num_experts, cfg.moe.top_k
+        assert float(aux) == pytest.approx(cfg.moe.aux_loss_coef * k,
+                                           rel=1e-3)

@@ -1,0 +1,96 @@
+"""SpecTrain math: Eqs. (1)-(6) of the paper."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import spectrain as st
+
+
+class TestVersionDifference:
+    def test_eq5_eq6_paper_values_n4(self):
+        # Eq. 5: s_fwd = floor(k/2) + N - k - 1 ; Eq. 6: s_bwd = floor(k/2)
+        assert st.version_difference_paper(0, 4, "forward") == 3
+        assert st.version_difference_paper(1, 4, "forward") == 2
+        assert st.version_difference_paper(2, 4, "forward") == 2
+        assert st.version_difference_paper(3, 4, "forward") == 1
+        assert st.version_difference_paper(0, 4, "backward") == 0
+        assert st.version_difference_paper(1, 4, "backward") == 0
+        assert st.version_difference_paper(2, 4, "backward") == 1
+        assert st.version_difference_paper(3, 4, "backward") == 1
+
+    def test_paper_worked_example(self):
+        # Fig. 7(d): N=3, minibatch at stage 0 forward, completes 2 units
+        # later -> s = 2
+        assert st.version_difference_paper(0, 3, "forward") == 2
+
+    def test_fwd_minus_bwd_gap(self):
+        # s_fwd - s_bwd = N - k - 1 (the 1F1B gap between fwd and bwd)
+        for n in (2, 3, 4, 8):
+            for k in range(n):
+                gap = (st.version_difference_paper(k, n, "forward")
+                       - st.version_difference_paper(k, n, "backward"))
+                assert gap == n - k - 1
+
+    def test_stream_schedule(self):
+        for n in (1, 2, 4, 8):
+            for k in range(n):
+                assert st.version_difference_stream(k, n, "forward") == \
+                    2 * (n - 1 - k)
+                assert st.version_difference_stream(k, n, "backward") == 0
+
+    def test_last_stage_fresh(self):
+        # the last stage reads (nearly) fresh weights under both schedules
+        assert st.version_difference_stream(7, 8, "forward") == 0
+        assert st.version_difference_paper(3, 4, "forward") == 1
+
+    def test_range_check(self):
+        with pytest.raises(ValueError):
+            st.version_difference_paper(4, 4, "forward")
+        with pytest.raises(ValueError):
+            st.version_difference_stream(-1, 4, "backward")
+
+
+class TestPrediction:
+    def test_eq4_formula(self):
+        w = {"a": jnp.ones((3,)), "b": jnp.full((2, 2), 2.0)}
+        v = {"a": jnp.full((3,), 0.5), "b": jnp.ones((2, 2))}
+        got = st.predict_weights(w, v, lr=0.1, s=4)
+        np.testing.assert_allclose(got["a"], 1.0 - 4 * 0.1 * 0.5, rtol=1e-6)
+        np.testing.assert_allclose(got["b"], 2.0 - 4 * 0.1 * 1.0, rtol=1e-6)
+
+    def test_s_zero_identity(self):
+        key = jax.random.PRNGKey(0)
+        w = jax.random.normal(key, (16,))
+        v = jax.random.normal(key, (16,))
+        got = st.predict_weights(w, v, lr=0.3, s=0)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(w))
+
+    def test_recursive_equals_closed_form(self):
+        # applying Eq. 3 s times with frozen momentum == Eq. 4
+        key = jax.random.PRNGKey(1)
+        w = jax.random.normal(key, (8,))
+        v = jax.random.normal(jax.random.PRNGKey(2), (8,))
+        lr, s = 0.05, 5
+        step = w
+        for _ in range(s):
+            step = st.predict_weights(step, v, lr=lr, s=1)
+        closed = st.predict_weights(w, v, lr=lr, s=s)
+        np.testing.assert_allclose(np.asarray(step), np.asarray(closed),
+                                   rtol=1e-5)
+
+    def test_stacked_matches_per_stage(self):
+        key = jax.random.PRNGKey(3)
+        w = jax.random.normal(key, (4, 6, 5))       # [stages, ...]
+        v = jax.random.normal(jax.random.PRNGKey(4), (4, 6, 5))
+        s_vec = jnp.array([6.0, 4.0, 2.0, 0.0])
+        got = st.predict_weights_stacked(w, v, 0.1, s_vec)
+        for k in range(4):
+            exp = st.predict_weights(w[k], v[k], 0.1, float(s_vec[k]))
+            np.testing.assert_allclose(np.asarray(got[k]), np.asarray(exp),
+                                       rtol=1e-6)
+
+    def test_rmse(self):
+        a = {"x": jnp.zeros((4,))}
+        b = {"x": jnp.full((4,), 2.0)}
+        assert float(st.rmse(a, b)) == pytest.approx(2.0)

@@ -1,0 +1,94 @@
+"""End-to-end behaviour: the paper's full claim chain on real training
+runs (CPU-scale), through the public driver."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.core import pipeline_stream
+from repro.data import DataConfig, SyntheticLM
+from repro.models import Model
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _train(mode, steps=120, lr=0.08, pipe=4, seed=0):
+    cfg = tiny_cfg("granite-8b", n_layers=4, pipe=pipe)
+    m = Model(cfg)
+    data = SyntheticLM(DataConfig(cfg.vocab_size, 16, 8, seed=seed))
+    batch0 = data.batch_at(0)
+    sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                       batch0)
+    state = pipeline_stream.init_state(m, jax.random.PRNGKey(seed), sds,
+                                       mode=mode)
+    step = jax.jit(pipeline_stream.make_train_step(m, mode=mode, lr=lr))
+    losses = []
+    for s in range(steps):
+        state, met = step(state, data.batch_at(s))
+        if float(met["loss_valid"]):
+            losses.append(float(met["loss"]))
+    return np.asarray(losses), data
+
+
+@pytest.mark.slow
+class TestPaperClaims:
+    def test_spectrain_beats_stale_modes_on_real_training(self):
+        """Fig. 11 analogue on the streaming runtime with real data."""
+        finals = {}
+        for mode in ("vanilla", "pipedream", "spectrain"):
+            losses, data = _train(mode)
+            assert np.isfinite(losses).all(), mode
+            finals[mode] = losses[-20:].mean()
+        assert finals["spectrain"] <= finals["vanilla"] + 0.02, finals
+        assert finals["spectrain"] <= finals["pipedream"] + 0.02, finals
+
+    def test_learns_toward_bigram_floor(self):
+        losses, data = _train("spectrain", steps=150, lr=0.05)
+        floor = data.optimal_loss()
+        start_gap = losses[0] - floor
+        end_gap = losses[-10:].mean() - floor
+        assert end_gap < 0.78 * start_gap, (losses[0], losses[-1], floor)
+
+
+@pytest.mark.slow
+class TestDrivers:
+    def _run(self, mod, args):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(ROOT, "src")
+        out = subprocess.run([sys.executable, "-m", mod, *args],
+                             capture_output=True, text=True, env=env,
+                             timeout=900)
+        assert out.returncode == 0, out.stdout + out.stderr
+        return out.stdout
+
+    def test_train_driver_end_to_end(self, tmp_path):
+        out = self._run("repro.launch.train", [
+            "--arch", "granite-8b", "--smoke", "--layers", "4",
+            "--pipe", "2", "--steps", "30", "--batch", "8", "--seq", "16",
+            "--lr", "2e-2", "--json", "--log-every", "10",
+            "--ckpt-dir", str(tmp_path)])
+        recs = [json.loads(l) for l in out.splitlines()
+                if l.startswith("{")]
+        assert recs[-1]["loss"] < recs[0]["loss"]
+
+    def test_train_driver_resume(self, tmp_path):
+        self._run("repro.launch.train", [
+            "--arch", "granite-8b", "--smoke", "--layers", "2",
+            "--pipe", "2", "--steps", "10", "--batch", "4", "--seq", "8",
+            "--save-every", "5", "--ckpt-dir", str(tmp_path)])
+        out = self._run("repro.launch.train", [
+            "--arch", "granite-8b", "--smoke", "--layers", "2",
+            "--pipe", "2", "--steps", "14", "--batch", "4", "--seq", "8",
+            "--resume", "auto", "--ckpt-dir", str(tmp_path)])
+        assert "# resumed from step" in out
+
+    def test_serve_driver(self):
+        out = self._run("repro.launch.serve", [
+            "--arch", "granite-8b", "--batch", "2", "--prompt-len", "8",
+            "--gen", "8"])
+        assert "decode:" in out
