@@ -1,0 +1,60 @@
+"""Planner benchmark: partition quality and planning time vs layer count.
+
+Rows:
+  planner/partition/L<L>xS<S>   — DP planning time; derived column shows
+                                  the DP vs uniform bottleneck ratio on a
+                                  skewed synthetic profile (lower = DP
+                                  finds a strictly better split).
+  planner/plan/<arch>           — end-to-end ``plan()`` time (profile +
+                                  partition + IR emission + staleness
+                                  derivation) on real configs.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _skewed(L: int):
+    # middle third of the stack 8x heavier (MoE-ish hotspot)
+    return [8.0 if L // 3 <= j < 2 * L // 3 else 1.0 for j in range(L)]
+
+
+def main(fast: bool = True):
+    from repro.planner import dp_split, plan, synthetic_profile, uniform
+    from repro.planner.partition import bottleneck, partition_profile, \
+        profile_bottleneck
+
+    lines = []
+    sizes = [(8, 4), (16, 4), (32, 4), (64, 8)] if fast else \
+            [(8, 4), (16, 4), (32, 4), (64, 8), (128, 8), (256, 16)]
+    for L, S in sizes:
+        comp = _skewed(L)
+        cut = [0.05] * L
+        t0 = time.perf_counter()
+        reps = 5
+        for _ in range(reps):
+            part = dp_split(comp, cut, S)
+        us = (time.perf_counter() - t0) / reps * 1e6
+        dp_cost = bottleneck(comp, cut, part)
+        u_cost = bottleneck(comp, cut, uniform(L, S))
+        lines.append(f"planner/partition/L{L}xS{S},{us:.0f},"
+                     f"dp_over_uniform={dp_cost / u_cost:.3f};"
+                     f"sizes={'-'.join(map(str, part.sizes()))}")
+
+    archs = ["granite-8b"] if fast else ["granite-8b", "deepseek-moe-16b",
+                                         "rwkv6-7b"]
+    from repro.configs import get_config, smoke_config
+    for name in archs:
+        cfg = smoke_config(get_config(name)).replace(n_layers=8)
+        t0 = time.perf_counter()
+        p = plan(cfg, n_stages=4, schedule="stream",
+                 profile_method="analytic")
+        us = (time.perf_counter() - t0) * 1e6
+        lines.append(f"planner/plan/{name},{us:.0f},"
+                     f"s_fwd={'-'.join(map(str, p.s_fwd))};"
+                     f"ring={p.ring_slots}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

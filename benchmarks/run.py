@@ -18,7 +18,8 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (breakdown, comm_time, comm_volume, convergence,
-                            kernel_bench, rmse, roofline, throughput)
+                            kernel_bench, planner_bench, rmse, roofline,
+                            throughput)
     benches = {
         "comm_volume": comm_volume.main,      # Fig. 3
         "comm_time": comm_time.main,          # Fig. 4
@@ -28,6 +29,7 @@ def main() -> int:
         "convergence": convergence.main,      # Fig. 11 / Table 1
         "kernels": kernel_bench.main,         # Pallas kernels
         "roofline": roofline.main,            # EXPERIMENTS.md §Roofline
+        "planner": planner_bench.main,        # EXPERIMENTS.md §Planner
     }
     picked = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

@@ -39,6 +39,37 @@ from repro.optim import sgd
 MODES = ("vanilla", "pipedream", "spectrain")
 
 
+def _plan_vectors(S: int, plan):
+    """(s_fwd, bwd_lag, fb_gap) per stage — from a planner
+    ``PipelinePlan`` when given (IR-derived), else the closed-form
+    streaming schedule.
+
+    ``s_fwd``   prediction distance (updates between fwd read and the
+                minibatch's own update) — Eq. 4's s;
+    ``bwd_lag`` injection→backward ticks, 2(S−1)−k — gates warm-up
+                validity and the stage-0 batch-ring read;
+    ``fb_gap``  same-stage fwd→backward ticks, 2(S−1−k) — the stash-ring
+                gather offsets.
+
+    The runtime's dataflow (one fwd/bwd wave per tick, ring rotation) IS
+    the stream schedule, so only stream plans are accepted; the planner
+    derives the same vectors by walking IR events, which turns the
+    constants below into a checked property.
+    """
+    if plan is None:
+        return ([st.version_difference_stream(k, S, "forward")
+                 for k in range(S)],
+                [2 * (S - 1) - k for k in range(S)],
+                [2 * (S - 1 - k) for k in range(S)])
+    if plan.schedule != "stream":
+        raise ValueError(
+            f"pipeline_stream executes the stream schedule, got a "
+            f"{plan.schedule!r} plan (use core.simulator for those)")
+    if plan.n_stages != S:
+        raise ValueError(f"plan has {plan.n_stages} stages, model has {S}")
+    return list(plan.s_fwd), list(plan.bwd_lag), list(plan.fb_gap)
+
+
 def _ring_write(ring, idx, val):
     """ring leaves [R, ...]; write val at slot idx (traced scalar)."""
     return jax.tree.map(
@@ -70,7 +101,7 @@ def _stash_weights(w_stash, stages, slot):
 
 def make_state(model, params, batch_sds, *, mode: str = "spectrain",
                ticks_per_step: int = 1,
-               fused_predict: bool = False) -> Dict[str, Any]:
+               fused_predict: bool = False, plan=None) -> Dict[str, Any]:
     """Streaming train state: params + momentum + in-flight rings.
 
     ``ticks_per_step``: the global batch is split into this many per-tick
@@ -97,7 +128,11 @@ def make_state(model, params, batch_sds, *, mode: str = "spectrain",
             "stages": jax.tree.map(lambda p: p.astype(cdt),
                                    params["stages"]),
         }
-    R = 2 * S - 1
+    # _plan_vectors validates the plan (stream schedule, stage count) so
+    # a mismatched plan fails here rather than silently under-sizing the
+    # rings that a (plan-less or otherwise) train step later indexes.
+    _, lag, gap = _plan_vectors(S, plan)
+    R = max(max(lag), max(gap)) + 1
     tok_sds = batch_sds["tokens"]
     B, seq = tok_sds.shape[0], tok_sds.shape[1]
     assert B % ticks_per_step == 0, (B, ticks_per_step)
@@ -122,27 +157,32 @@ def make_state(model, params, batch_sds, *, mode: str = "spectrain",
 
 
 def init_state(model, key, batch_sds, *, mode: str = "spectrain",
-               ticks_per_step: int = 1):
+               ticks_per_step: int = 1, plan=None):
     return make_state(model, model.init(key), batch_sds, mode=mode,
-                      ticks_per_step=ticks_per_step)
+                      ticks_per_step=ticks_per_step, plan=plan)
 
 
 def make_train_step(model, *, mode: str = "spectrain", lr: float,
                     gamma: float = 0.9, clip: Optional[float] = None,
                     ticks_per_step: int = 1, fused_predict: bool = False,
-                    bwd_dtype: Optional[str] = None) -> Callable:
+                    bwd_dtype: Optional[str] = None, plan=None) -> Callable:
     """``fused_predict``: prediction computed inside the update pass and
     stored bf16 (see make_state) — same math, one less weight pass/tick.
     ``bwd_dtype``: linearize the backward at weights cast to this dtype
     (e.g. "bfloat16") — gradients and their data-axis all-reduce then move
-    half the bytes (standard mixed-precision training)."""
+    half the bytes (standard mixed-precision training).
+    ``plan``: optional ``repro.planner.PipelinePlan`` (stream schedule);
+    supplies the IR-derived prediction distances and ring offsets in
+    place of the closed-form constants."""
     assert mode in MODES, mode
     fused_predict = fused_predict and mode == "spectrain"
     S = model.n_stages
-    R = 2 * S - 1
-    g_vec = jnp.array([2 * (S - 1 - k) for k in range(S)], jnp.int32)
-    s_fwd = jnp.array([st.version_difference_stream(k, S, "forward")
-                       for k in range(S)], jnp.float32)
+    s_fwd_v, bwd_lag, fb_gap = _plan_vectors(S, plan)
+    R = max(max(bwd_lag), max(fb_gap)) + 1
+    s_fwd_embed = float(s_fwd_v[0])
+    g_vec = jnp.array(fb_gap, jnp.int32)       # stash gather offsets
+    lag_vec = jnp.array(bwd_lag, jnp.int32)    # injection -> bwd ticks
+    s_fwd = jnp.array(s_fwd_v, jnp.float32)
 
     def stage_fn(sp, xk):
         xk, aux = model.stage_apply(sp, (xk, jnp.zeros((), jnp.float32)))
@@ -183,7 +223,7 @@ def make_train_step(model, *, mode: str = "spectrain", lr: float,
             stages_f = st.predict_weights_stacked(stages, mom_stages,
                                                   lr, s_fwd)
             outer_embed_f = st.predict_weights(outer, mom_outer, lr,
-                                               float(2 * (S - 1)))
+                                               s_fwd_embed)
         else:
             stages_f, outer_embed_f = stages, outer
 
@@ -199,7 +239,6 @@ def make_train_step(model, *, mode: str = "spectrain", lr: float,
         batch_ring = _ring_write(state["batch_ring"], slot, batch)
 
         # ---------- head loss at the last stage ---------------------------
-        karange = jnp.arange(S)
         valid_head = (t >= (S - 1)).astype(jnp.float32)
         tgt = _ring_read(batch_ring, jnp.mod(t - (S - 1), R))["targets"]
 
@@ -209,7 +248,7 @@ def make_train_step(model, *, mode: str = "spectrain", lr: float,
         g_outer_head, cot_last = head_vjp(valid_head)
 
         # ---------- backward all stages ------------------------------------
-        valid_b = ((t - 2 * (S - 1) + karange) >= 0)
+        valid_b = ((t - lag_vec) >= 0)
         B_cot = state["bwd_buf"].at[S - 1].set(cot_last)
         B_cot = B_cot * valid_b[:, None, None, None].astype(B_cot.dtype)
         idx = jnp.mod(t - g_vec, R)
@@ -227,7 +266,7 @@ def make_train_step(model, *, mode: str = "spectrain", lr: float,
         gW, gX = bwd_vjp((B_cot, aux_cot))
 
         # ---------- embed backward -----------------------------------------
-        old_batch = _ring_read(batch_ring, jnp.mod(t - 2 * (S - 1), R))
+        old_batch = _ring_read(batch_ring, jnp.mod(t - lag_vec[0], R))
         _, evjp = jax.vjp(lambda o: model.embed(o, old_batch), outer)
         (g_outer_embed,) = evjp(gX[0] * valid_b[0].astype(gX.dtype))
 
@@ -254,7 +293,7 @@ def make_train_step(model, *, mode: str = "spectrain", lr: float,
                     lambda p: p.astype(cdt),
                     st.predict_weights(new_params["outer"],
                                        new_mom.v["outer"], lr,
-                                       float(2 * (S - 1)))),
+                                       s_fwd_embed)),
             }
 
         # ---------- rotate in-flight buffers --------------------------------

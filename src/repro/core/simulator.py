@@ -49,11 +49,32 @@ class StagedFns:
 class Simulator:
     SCHEMES = ("sync", "vanilla", "pipedream", "spectrain")
 
-    def __init__(self, fns: StagedFns, params, *, n_stages: int,
+    def __init__(self, fns: StagedFns, params, *, n_stages: int = 0,
                  scheme: str = "spectrain", lr: float = 1e-2,
                  gamma: float = 0.9, clip: Optional[float] = None,
-                 rmse_s: Sequence[int] = ()):
+                 rmse_s: Sequence[int] = (), plan=None):
+        """``plan``: an optional ``repro.planner.PipelinePlan``; its
+        IR-derived per-stage (s_fwd, s_bwd) replace the hardcoded
+        round-robin closed forms, so any emitted schedule's staleness
+        structure can be simulated.  Without a plan the paper's
+        round-robin Eqs. (5)/(6) are used, as before."""
         assert scheme in self.SCHEMES, scheme
+        if plan is not None:
+            if n_stages and n_stages != plan.n_stages:
+                raise ValueError(f"n_stages={n_stages} contradicts "
+                                 f"plan.n_stages={plan.n_stages}")
+            n_stages = plan.n_stages
+            self.s_fwd = tuple(plan.s_fwd)
+            self.s_bwd = tuple(plan.s_bwd)
+        else:
+            if not n_stages:
+                raise ValueError("need n_stages or a plan")
+            self.s_fwd = tuple(st.version_difference_paper(k, n_stages,
+                                                           "forward")
+                               for k in range(n_stages))
+            self.s_bwd = tuple(st.version_difference_paper(k, n_stages,
+                                                           "backward")
+                               for k in range(n_stages))
         self.fns = fns
         self.N = n_stages
         self.scheme = scheme
@@ -121,8 +142,12 @@ class Simulator:
         else:
             t_c = i + N - 1
             self._ensure(t_c)
-            v_f = [i + (k + 1) // 2 for k in range(N)]
-            v_b = [i + N - 1 - k // 2 for k in range(N)]
+            # read versions from the (IR-derived or closed-form) staleness
+            # vectors; max(0, ·) truncates warm-up reads to the initial
+            # weights.  Under the default round-robin plan these are
+            # exactly v_f = i + ⌈k/2⌉ and v_b = i + N − 1 − ⌊k/2⌋.
+            v_f = [max(0, t_c - self.s_fwd[k]) for k in range(N)]
+            v_b = [max(0, t_c - self.s_bwd[k]) for k in range(N)]
         predicted = scheme == "spectrain"
 
         # ---- forward ----------------------------------------------------
@@ -173,7 +198,8 @@ class Simulator:
                 metrics[f"rmse_stale_s{s}"] = float(
                     st.rmse(self.hist[v0], new_p))
 
-        self._gc(t_c + 1 - max(2 * N, max(self.rmse_s or (0,)) + 1))
+        self._gc(t_c + 1 - max(2 * N, max(self.s_fwd) + 2,
+                               max(self.rmse_s or (0,)) + 1))
         self.i += 1
         return metrics
 

@@ -28,6 +28,7 @@ from repro.core import pipeline_stream, pipeline_sync
 from repro.data import DataConfig, SyntheticLM
 from repro.models import Model
 from repro.optim import compression, sgd
+from repro.planner import check_against_closed_forms, plan as make_plan
 from repro.runtime import checkpoint as ckpt
 
 
@@ -76,6 +77,12 @@ def main(argv=None) -> int:
     ap.add_argument("--save-every", type=int, default=20)
     ap.add_argument("--resume", default="", choices=("", "auto"))
     ap.add_argument("--compress", default="", choices=("", "topk", "int8"))
+    ap.add_argument("--partitioner", default="dp", choices=("dp", "uniform"),
+                    help="stage-partition method for the planner")
+    ap.add_argument("--profile-method", default="analytic",
+                    choices=("auto", "hlo", "timed", "analytic"),
+                    dest="profile_method",
+                    help="per-layer cost acquisition for the planner")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--json", action="store_true",
                     help="emit one JSON line per logged step")
@@ -90,6 +97,17 @@ def main(argv=None) -> int:
     batch_sds = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch0)
 
+    # profile-guided plan: partition + IR-derived staleness for the
+    # schedule this run executes (gpipe for the sync fill/drain pipeline,
+    # the streaming tick schedule otherwise)
+    pplan = make_plan(
+        cfg, n_stages=model.n_stages,
+        schedule="gpipe" if args.mode == "sync" else "stream",
+        partitioner=args.partitioner, profile_method=args.profile_method,
+        batch=args.batch, seq=args.seq)
+    check_against_closed_forms(pplan)
+    print(f"# {pplan.summary()}")
+
     if args.mode == "sync":
         state = pipeline_sync.init_state(model, key)
         step_fn = pipeline_sync.make_train_step(
@@ -99,10 +117,10 @@ def main(argv=None) -> int:
     else:
         state = pipeline_stream.init_state(
             model, key, batch_sds, mode=args.mode,
-            ticks_per_step=args.ticks)
+            ticks_per_step=args.ticks, plan=pplan)
         step_fn = pipeline_stream.make_train_step(
             model, mode=args.mode, lr=args.lr, gamma=args.gamma,
-            clip=args.clip or None, ticks_per_step=args.ticks)
+            clip=args.clip or None, ticks_per_step=args.ticks, plan=pplan)
     step_fn = jax.jit(step_fn, donate_argnums=0)
 
     start = 0

@@ -1,0 +1,51 @@
+"""Profile-guided pipeline planner.
+
+The repo's pipeline runtimes used to hardcode two planning decisions:
+
+  * **where to cut the model** — every runtime assumed the uniform
+    layers-divided-by-stages split, and
+  * **how stale each stage's weights are** — the SpecTrain prediction
+    distances s_fwd/s_bwd were trusted closed forms (Eqs. 5–6 in
+    ``core/spectrain.py``) valid for exactly one schedule.
+
+This subsystem makes both explicit and checkable:
+
+  ``profiler``      per-layer compute / activation / parameter cost
+                    profiles — compiled-HLO counters
+                    (``runtime/hlo_cost.py``) with timed-execution and
+                    analytic fallbacks.
+  ``partition``     PipeDream-style dynamic program splitting the layer
+                    list into N stages minimizing the bottleneck of
+                    per-stage compute + activation-transfer cost, plus
+                    the ``uniform`` baseline.
+  ``schedule_ir``   an event-timeline IR (typed fwd / bwd / update
+                    events) emitting the paper's round-robin 1F1B
+                    schedule, GPipe fill-drain, and the streaming tick
+                    schedule; weight-version differences are *derived*
+                    by counting update events between a weight read and
+                    the minibatch's own gradient apply.
+  ``api``           ``plan(config, n_stages) -> PipelinePlan``, consumed
+                    by ``core/simulator.py`` (arbitrary-schedule
+                    staleness), ``core/pipeline_stream.py`` (prediction
+                    distances + ring offsets) and ``launch/train.py``.
+
+Quick start::
+
+    from repro.planner import plan
+    p = plan(cfg, n_stages=4, schedule="stream", partitioner="dp")
+    print(p.summary())          # partition, s_fwd/s_bwd, bottleneck
+"""
+from repro.planner.api import (PipelinePlan, SCHEDULES,
+                               check_against_closed_forms, plan)
+from repro.planner.partition import Partition, dp_split, uniform
+from repro.planner.profiler import (LayerProfile, ModelProfile,
+                                    profile_model, synthetic_profile)
+from repro.planner.schedule_ir import (Event, Schedule, emit, gpipe,
+                                       round_robin_1f1b, streaming)
+
+__all__ = [
+    "PipelinePlan", "SCHEDULES", "plan", "check_against_closed_forms",
+    "Partition", "dp_split", "uniform",
+    "LayerProfile", "ModelProfile", "profile_model", "synthetic_profile",
+    "Event", "Schedule", "emit", "gpipe", "round_robin_1f1b", "streaming",
+]

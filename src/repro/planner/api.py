@@ -1,0 +1,135 @@
+"""`plan()` — the planner's front door.
+
+Combines a cost profile (:mod:`profiler`), a stage split
+(:mod:`partition`) and an emitted schedule timeline (:mod:`schedule_ir`)
+into one :class:`PipelinePlan` that the simulator, the streaming pipeline
+runtime and the training launcher all consume.  The per-stage weight
+prediction distances ``s_fwd``/``s_bwd`` are *derived* from the IR by
+counting update events, never assumed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+from repro.planner import partition as pt
+from repro.planner import profiler as pf
+from repro.planner import schedule_ir as ir
+
+SCHEDULES = tuple(ir.EMITTERS)
+
+
+@dataclass(frozen=True)
+class PipelinePlan:
+    """Everything the runtimes need to execute one pipeline layout.
+
+    ``s_fwd``/``s_bwd`` are the IR-derived weight-version differences per
+    stage (SpecTrain's prediction distances, Eqs. 5–6 generalized);
+    ``bwd_lag`` is the injection→backward tick distance per stage (how
+    long a minibatch's gradient is in flight); ``fb_gap`` is the
+    same-stage forward→backward distance (how long each stage stashes an
+    input activation — the streaming runtime's ring gather offsets);
+    ``partition`` maps layers to stages; ``bottleneck_s`` is the
+    modelled slowest-stage time.
+    """
+    n_stages: int
+    schedule: str
+    s_fwd: Tuple[int, ...]
+    s_bwd: Tuple[int, ...]
+    bwd_lag: Tuple[int, ...]
+    fb_gap: Tuple[int, ...]
+    partition: pt.Partition
+    partitioner: str = "uniform"
+    bottleneck_s: float = 0.0
+    uniform_bottleneck_s: float = 0.0
+    profile: Optional[pf.ModelProfile] = field(default=None, repr=False)
+    ir: Optional[ir.Schedule] = field(default=None, repr=False, hash=False,
+                                      compare=False)
+
+    def staleness(self, stage: int, phase: str) -> int:
+        vec = self.s_fwd if phase == "forward" else self.s_bwd
+        if phase not in ("forward", "backward"):
+            raise ValueError(phase)
+        if not 0 <= stage < self.n_stages:
+            raise ValueError(f"stage {stage} out of range for "
+                             f"{self.n_stages} stages")
+        return vec[stage]
+
+    @property
+    def ring_slots(self) -> int:
+        """In-flight slots the streaming runtime must hold."""
+        return max(max(self.bwd_lag), max(self.fb_gap)) + 1
+
+    def summary(self) -> str:
+        return (f"plan[{self.schedule} x{self.n_stages} "
+                f"part={self.partitioner}:{self.partition.sizes()} "
+                f"s_fwd={self.s_fwd} s_bwd={self.s_bwd} "
+                f"bottleneck={self.bottleneck_s:.2e}s]")
+
+
+def plan(config=None, n_stages: int = 2, *, schedule: str = "1f1b_rr",
+         partitioner: str = "dp", profile: Optional[pf.ModelProfile] = None,
+         profile_method: str = "analytic", batch: int = 1, seq: int = 32,
+         n_layers: Optional[int] = None,
+         keep_ir: bool = True, validate: bool = True) -> PipelinePlan:
+    """Build a :class:`PipelinePlan`.
+
+    ``config`` is an ``ArchConfig`` (profiled via ``profile_method`` at
+    the run's ``batch``/``seq`` shape), or None with an explicit
+    ``profile`` or bare ``n_layers`` (uniform unit costs).
+    ``schedule`` ∈ {"1f1b_rr", "gpipe", "stream"}.
+    """
+    if schedule not in ir.EMITTERS:
+        raise KeyError(
+            f"unknown schedule {schedule!r}; known: {sorted(ir.EMITTERS)}")
+    if profile is None:
+        if config is not None:
+            profile = pf.profile_model(config, method=profile_method,
+                                       batch=batch, seq=seq)
+        else:
+            L = n_layers if n_layers is not None else n_stages
+            profile = pf.synthetic_profile([1.0] * L)
+    if profile.n_layers < n_stages:
+        raise ValueError(f"{profile.n_layers} layers cannot fill "
+                         f"{n_stages} stages")
+
+    part = pt.partition_profile(profile, n_stages, method=partitioner)
+    cost = pt.profile_bottleneck(profile, part)
+    ucost = pt.profile_bottleneck(
+        profile, pt.uniform(profile.n_layers, n_stages))
+
+    sched = ir.emit(schedule, n_stages)
+    if validate:
+        sched.validate()
+    mb = sched.steady_minibatch()
+    s_fwd = sched.staleness_vector("forward", mb)
+    s_bwd = sched.staleness_vector("backward", mb)
+    bwd_lag = tuple(sched.bwd_lag(k, mb) for k in range(n_stages))
+    fb_gap = tuple(sched.fwd_bwd_gap(k, mb) for k in range(n_stages))
+
+    return PipelinePlan(
+        n_stages=n_stages, schedule=schedule, s_fwd=s_fwd, s_bwd=s_bwd,
+        bwd_lag=bwd_lag, fb_gap=fb_gap,
+        partition=part, partitioner=partitioner,
+        bottleneck_s=cost, uniform_bottleneck_s=ucost, profile=profile,
+        ir=sched if keep_ir else None)
+
+
+def check_against_closed_forms(p: PipelinePlan) -> None:
+    """Assert IR-derived staleness equals ``core/spectrain.py``'s closed
+    forms — the property this subsystem exists to make checkable."""
+    from repro.core import spectrain as st
+    closed = {"1f1b_rr": st.version_difference_paper,
+              "stream": st.version_difference_stream}
+    if p.schedule == "gpipe":
+        if any(p.s_fwd) or any(p.s_bwd):
+            raise AssertionError(f"gpipe must be staleness-free, got {p}")
+        return
+    fn = closed[p.schedule]
+    for k in range(p.n_stages):
+        for phase, vec in (("forward", p.s_fwd), ("backward", p.s_bwd)):
+            want = fn(k, p.n_stages, phase)
+            if vec[k] != want:
+                raise AssertionError(
+                    f"{p.schedule} stage {k} {phase}: IR-derived {vec[k]} "
+                    f"!= closed form {want}")

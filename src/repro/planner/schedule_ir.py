@@ -1,0 +1,310 @@
+"""Event-timeline IR for pipeline schedules.
+
+A :class:`Schedule` is an ordered list of typed events — ``fwd``/``bwd``
+compute events and ``update`` events (each update names the stages whose
+weights it touches and the minibatches whose gradients it applies).  Time
+is discrete: events carry a tick ``t`` plus a deterministic sub-tick order
+(fwd by ascending stage, then bwd by descending stage, then updates), so
+every weight read happens before the same tick's weight writes.
+
+Three emitters cover the schedules in this repo:
+
+  * :func:`round_robin_1f1b` — the paper's §3.1 round-robin schedule (one
+    global update per time unit, minibatch round trip of N−1 units).
+  * :func:`gpipe` — fill/drain with gradient accumulation and a single
+    update per round (the sync pipeline, ``core/pipeline_sync.py``).
+  * :func:`streaming` — the tick schedule of ``core/pipeline_stream.py``
+    (per-stage updates every tick, zero bubble after warm-up).
+
+The point of the IR is that weight-version differences are **derived**,
+not assumed: :meth:`Schedule.staleness` counts the update events landing
+on a stage's weights between a minibatch's weight-read event and that
+minibatch's own gradient-apply event.  The closed forms in
+``core/spectrain.py`` (Eqs. 5–6 and the streaming variant) become checked
+properties of the corresponding emitters instead of trusted constants.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+FWD, BWD, UPDATE = "fwd", "bwd", "update"
+_KIND_RANK = {FWD: 0, BWD: 1, UPDATE: 2}
+
+
+@dataclass(frozen=True)
+class Event:
+    """One schedule event.
+
+    ``stage``/``mb`` identify compute events; update events instead carry
+    ``stages`` (weights written) and ``mbs`` (gradients applied) and keep
+    ``stage = mb = -1``.
+    """
+    kind: str
+    t: int
+    stage: int = -1
+    mb: int = -1
+    stages: Tuple[int, ...] = ()
+    mbs: Tuple[int, ...] = ()
+
+    def sort_key(self):
+        rank = _KIND_RANK[self.kind]
+        # fwd consumes activations from the previous stage (ascending);
+        # bwd consumes cotangents from the next stage (descending).
+        sub = self.stage if self.kind == FWD else -self.stage
+        return (self.t, rank, sub)
+
+
+@dataclass
+class Schedule:
+    name: str
+    n_stages: int
+    events: List[Event] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.events = sorted(self.events, key=Event.sort_key)
+        self._index: Dict[Tuple[str, int, int], int] = {}
+        self._own_update: Dict[Tuple[int, int], int] = {}
+        for i, e in enumerate(self.events):
+            if e.kind == UPDATE:
+                for k in e.stages:
+                    for m in e.mbs:
+                        self._own_update[(m, k)] = i
+            else:
+                self._index[(e.kind, e.mb, e.stage)] = i
+
+    # ------------------------------------------------------------ queries
+    def makespan(self) -> int:
+        return max(e.t for e in self.events) + 1 if self.events else 0
+
+    def minibatches(self) -> Tuple[int, ...]:
+        return tuple(sorted({e.mb for e in self.events if e.kind == FWD}))
+
+    def version_at(self, event_idx: int, stage: int) -> int:
+        """#updates touching ``stage``'s weights strictly before an event."""
+        return sum(1 for e in self.events[:event_idx]
+                   if e.kind == UPDATE and stage in e.stages)
+
+    def complete_minibatches(self) -> Tuple[int, ...]:
+        """Minibatches with fwd+bwd on every stage and an applied update."""
+        out = []
+        for m in self.minibatches():
+            ok = all((FWD, m, k) in self._index and (BWD, m, k) in self._index
+                     for k in range(self.n_stages))
+            ok = ok and all((m, k) in self._own_update
+                            for k in range(self.n_stages))
+            if ok:
+                out.append(m)
+        return tuple(out)
+
+    def steady_minibatch(self) -> int:
+        """A minibatch past warm-up (reads never truncated to version 0).
+
+        The closed forms of ``core/spectrain.py`` describe steady state;
+        early minibatches read the initial weights more often than the
+        formulas say.  Any complete minibatch injected after the pipeline
+        has filled (index ≥ 2·N) is in steady state for every schedule
+        emitted here.
+        """
+        complete = self.complete_minibatches()
+        if not complete:
+            raise ValueError(f"{self.name}: no complete minibatch in IR")
+        steady = [m for m in complete if m >= 2 * self.n_stages]
+        if not steady:
+            raise ValueError(
+                f"{self.name}: timeline too short for steady state "
+                f"(complete={complete[:4]}...); emit more minibatches")
+        return steady[len(steady) // 2]
+
+    # ---------------------------------------------------------- staleness
+    def staleness(self, stage: int, phase: str, mb: Optional[int] = None
+                  ) -> int:
+        """Derived weight-version difference s for (stage, phase).
+
+        s = #updates landing on ``stage``'s weights between the weight
+        read of minibatch ``mb``'s fwd/bwd event and ``mb``'s own
+        gradient-apply on that stage — the generic form of the paper's
+        Eqs. 5–6.
+        """
+        if phase not in ("forward", "backward"):
+            raise ValueError(phase)
+        if not 0 <= stage < self.n_stages:
+            raise ValueError(f"stage {stage} out of range for "
+                             f"{self.n_stages} stages")
+        if mb is None:
+            mb = self.steady_minibatch()
+        kind = FWD if phase == "forward" else BWD
+        read = self._index.get((kind, mb, stage))
+        own = self._own_update.get((mb, stage))
+        if read is None or own is None:
+            raise ValueError(f"minibatch {mb} incomplete on stage {stage}")
+        return self.version_at(own, stage) - self.version_at(read, stage)
+
+    def staleness_vector(self, phase: str, mb: Optional[int] = None
+                         ) -> Tuple[int, ...]:
+        if mb is None:
+            mb = self.steady_minibatch()
+        return tuple(self.staleness(k, phase, mb)
+                     for k in range(self.n_stages))
+
+    def bwd_lag(self, stage: int, mb: Optional[int] = None) -> int:
+        """Ticks between a minibatch's injection (stage-0 forward) and its
+        stage-k backward — how long gradients for stage k are in flight."""
+        if mb is None:
+            mb = self.steady_minibatch()
+        bwd = self._index.get((BWD, mb, stage))
+        fwd0 = self._index.get((FWD, mb, 0))
+        if bwd is None or fwd0 is None:
+            raise ValueError(f"minibatch {mb} incomplete on stage {stage}")
+        return self.events[bwd].t - self.events[fwd0].t
+
+    def fwd_bwd_gap(self, stage: int, mb: Optional[int] = None) -> int:
+        """Ticks between a minibatch's stage-k forward and its stage-k
+        backward — how long stage k must stash that minibatch's input
+        activation (the streaming runtime's ring gather offset)."""
+        if mb is None:
+            mb = self.steady_minibatch()
+        bwd = self._index.get((BWD, mb, stage))
+        fwd = self._index.get((FWD, mb, stage))
+        if bwd is None or fwd is None:
+            raise ValueError(f"minibatch {mb} incomplete on stage {stage}")
+        return self.events[bwd].t - self.events[fwd].t
+
+    # ----------------------------------------------------------- validity
+    def validate(self) -> None:
+        """Dataflow sanity: activations and cotangents exist when read.
+
+        * fwd(m, k) strictly after fwd(m, k−1)
+        * bwd(m, N−1) strictly after fwd(m, N−1)
+        * bwd(m, k) strictly after bwd(m, k+1)
+        * m's update on stage k strictly after bwd(m, k)
+        """
+        N = self.n_stages
+        for m in self.complete_minibatches():
+            f = [self._index[(FWD, m, k)] for k in range(N)]
+            b = [self._index[(BWD, m, k)] for k in range(N)]
+            for k in range(1, N):
+                if not f[k - 1] < f[k]:
+                    raise ValueError(
+                        f"{self.name}: fwd({m},{k}) before fwd({m},{k-1})")
+            if not f[N - 1] < b[N - 1]:
+                raise ValueError(f"{self.name}: bwd({m}) before fwd({m})")
+            for k in range(N - 1):
+                if not b[k + 1] < b[k]:
+                    raise ValueError(
+                        f"{self.name}: bwd({m},{k}) before bwd({m},{k+1})")
+            for k in range(N):
+                if not b[k] < self._own_update[(m, k)]:
+                    raise ValueError(
+                        f"{self.name}: update of {m} before bwd({m},{k})")
+
+    # ------------------------------------------------------------- render
+    def render(self, max_ticks: int = 24) -> str:
+        """ASCII timeline: one row per stage, ``f<mb>``/``b<mb>`` cells."""
+        grid: Dict[Tuple[int, int], List[str]] = {}
+        for e in self.events:
+            if e.kind == UPDATE:
+                for k in e.stages:
+                    grid.setdefault((k, e.t), []).append("u")
+            else:
+                grid.setdefault((e.stage, e.t), []).append(
+                    f"{e.kind[0]}{e.mb}")
+        T = min(self.makespan(), max_ticks)
+        width = max([len("+".join(grid.get((k, t), [])))
+                     for k in range(self.n_stages) for t in range(T)] + [2])
+        rows = []
+        for k in range(self.n_stages):
+            cells = ["+".join(grid.get((k, t), [])).ljust(width)
+                     for t in range(T)]
+            rows.append(f"s{k} |" + "|".join(cells) + "|")
+        return "\n".join(rows)
+
+
+# ===========================================================================
+# emitters
+# ===========================================================================
+
+
+def _default_mbs(n_stages: int) -> int:
+    # enough for fill, a steady-state region past 2N, and drain
+    return 6 * n_stages + 4
+
+
+def round_robin_1f1b(n_stages: int, n_minibatches: Optional[int] = None
+                     ) -> Schedule:
+    """The paper's round-robin schedule (§3.1, Figs. 4/7).
+
+    Each time unit every GPU runs one forward and one backward slot;
+    minibatch i runs fwd on stage k at unit ``i + ⌈k/2⌉`` and bwd at unit
+    ``i + N − 1 − ⌊k/2⌋``; its round trip completes in N−1 units and its
+    gradient updates all stages at the end of unit ``i + N − 1`` (one
+    global weight version per unit).
+    """
+    N = n_stages
+    M = n_minibatches or _default_mbs(N)
+    ev: List[Event] = []
+    all_stages = tuple(range(N))
+    for i in range(M):
+        for k in range(N):
+            ev.append(Event(FWD, i + (k + 1) // 2, stage=k, mb=i))
+            ev.append(Event(BWD, i + N - 1 - k // 2, stage=k, mb=i))
+        ev.append(Event(UPDATE, i + N - 1, stages=all_stages, mbs=(i,)))
+    return Schedule("1f1b_rr", N, ev)
+
+
+def gpipe(n_stages: int, n_microbatches: Optional[int] = None,
+          n_rounds: int = 3) -> Schedule:
+    """GPipe fill/drain: all microbatches forward, then all backward, then
+    one accumulated update — staleness-free (s_fwd = s_bwd = 0) at the
+    cost of a 2(N−1)-slot bubble per round."""
+    N = n_stages
+    M = n_microbatches or max(2, 2 * N)
+    ev: List[Event] = []
+    all_stages = tuple(range(N))
+    span = 2 * (M + N - 1) + 1
+    for r in range(n_rounds):
+        base = r * span
+        mbs = tuple(r * M + m for m in range(M))
+        for m in range(M):
+            for k in range(N):
+                ev.append(Event(FWD, base + m + k, stage=k, mb=r * M + m))
+                ev.append(Event(
+                    BWD, base + (M + N - 1) + (M - 1 - m) + (N - 1 - k),
+                    stage=k, mb=r * M + m))
+        ev.append(Event(UPDATE, base + span - 1, stages=all_stages, mbs=mbs))
+    return Schedule("gpipe", N, ev)
+
+
+def streaming(n_stages: int, n_ticks: Optional[int] = None) -> Schedule:
+    """The streaming tick schedule (``core/pipeline_stream.py``).
+
+    Per tick t, stage k forwards the minibatch injected k ticks ago and
+    backwards the one injected 2(N−1)−k ticks ago, then applies that
+    minibatch's gradient to **its own** weights — per-stage, per-tick
+    updates (minibatch id == injection tick).
+    """
+    N = n_stages
+    T = n_ticks or (_default_mbs(N) + 2 * (N - 1))
+    ev: List[Event] = []
+    for t in range(T):
+        for k in range(N):
+            if t - k >= 0:
+                ev.append(Event(FWD, t, stage=k, mb=t - k))
+            mb_b = t - 2 * (N - 1) + k
+            if mb_b >= 0 and mb_b <= t:
+                ev.append(Event(BWD, t, stage=k, mb=mb_b))
+                ev.append(Event(UPDATE, t, stages=(k,), mbs=(mb_b,)))
+    return Schedule("stream", N, ev)
+
+
+EMITTERS = {
+    "1f1b_rr": round_robin_1f1b,
+    "gpipe": gpipe,
+    "stream": streaming,
+}
+
+
+def emit(name: str, n_stages: int, **kw) -> Schedule:
+    if name not in EMITTERS:
+        raise KeyError(f"unknown schedule {name!r}; known: {sorted(EMITTERS)}")
+    return EMITTERS[name](n_stages, **kw)

@@ -18,6 +18,30 @@ def rng():
     return np.random.default_rng(0)
 
 
+def optional_hypothesis():
+    """(given, settings, st) — the real hypothesis API, or
+    decoration-safe stubs that mark just the property tests as skipped
+    when hypothesis isn't installed, leaving the rest of the module
+    collectable (modules that are *all* property tests should use
+    ``pytest.importorskip`` instead)."""
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ImportError:
+        def given(*a, **k):
+            return lambda f: pytest.mark.skip(
+                reason="hypothesis not installed")(f)
+
+        def settings(*a, **k):
+            return lambda f: f
+
+        class _Strategies:
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        return given, settings, _Strategies()
+
+
 def tiny_cfg(name="granite-8b", *, n_layers=4, pipe=2, tensor=1, ticks=2,
              **kw):
     """Reduced fp32 config with a real pipeline split (CPU-friendly)."""

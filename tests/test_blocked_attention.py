@@ -4,10 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from conftest import optional_hypothesis
 from repro.kernels.ref import attention_ref
 from repro.models.blocked_attention import blocked_attention
+
+given, settings, st = optional_hypothesis()
 
 
 def _ref(q, k, v, causal):

@@ -3,9 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from conftest import optional_hypothesis
 from repro.optim import adam, compression, sgd
+
+given, settings, st = optional_hypothesis()
 
 
 class TestMomentumSGD:

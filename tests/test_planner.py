@@ -1,0 +1,325 @@
+"""Profile-guided pipeline planner: DP partitioner, schedule IR, and the
+acceptance property — IR-derived staleness == the closed forms trusted by
+``core/spectrain.py``, and plans round-trip through both runtimes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import lm_batch, tiny_cfg
+from repro.core import pipeline_stream
+from repro.core import spectrain as st
+from repro.core.simulator import Simulator, make_mlp_staged
+from repro.models import Model
+from repro.planner import (PipelinePlan, Schedule, check_against_closed_forms,
+                           dp_split, plan, profile_model, synthetic_profile,
+                           uniform)
+from repro.planner import schedule_ir as ir
+from repro.planner.partition import bottleneck, partition_profile
+
+NS = (2, 3, 4, 8)
+
+
+# ===========================================================================
+# partition
+# ===========================================================================
+
+
+class TestPartition:
+    def test_uniform_split(self):
+        assert uniform(8, 4).boundaries == (0, 2, 4, 6, 8)
+        assert uniform(10, 4).sizes() == (3, 3, 2, 2)
+        assert uniform(4, 4).sizes() == (1, 1, 1, 1)
+        with pytest.raises(ValueError):
+            uniform(3, 4)
+
+    def test_dp_on_balanced_profile_matches_uniform(self):
+        comp, cut = [1.0] * 8, [0.0] * 8
+        part = dp_split(comp, cut, 4)
+        assert part.sizes() == (2, 2, 2, 2)
+
+    @pytest.mark.parametrize("n_stages", NS)
+    def test_dp_beats_uniform_on_skewed_profiles(self, n_stages):
+        """The PipeDream claim: profiling + DP strictly beats the
+        equal-layer-count split when the stack is imbalanced."""
+        rng = np.random.default_rng(n_stages)
+        L = 4 * n_stages
+        comp = [1.0] * L
+        # heavy run sitting (mostly) inside the first uniform stage —
+        # the equal-count split eats it whole, DP spreads it out
+        for j in range(L // n_stages):
+            comp[1 + j] = 6.0
+        cut = list(rng.uniform(0.0, 0.2, L))
+        part = dp_split(comp, cut, n_stages)
+        dp_cost = bottleneck(comp, cut, part)
+        u_cost = bottleneck(comp, cut, uniform(L, n_stages))
+        assert dp_cost < u_cost, (n_stages, dp_cost, u_cost)
+
+    def test_dp_is_optimal_vs_bruteforce(self):
+        """Exact bottleneck optimality on small instances."""
+        import itertools
+        rng = np.random.default_rng(0)
+        for trial in range(10):
+            L, S = 7, 3
+            comp = list(rng.uniform(0.5, 4.0, L))
+            cut = list(rng.uniform(0.0, 1.0, L))
+            part = dp_split(comp, cut, S)
+            got = bottleneck(comp, cut, part)
+            best = min(
+                bottleneck(comp, cut,
+                           ir_part := type(part)((0,) + b + (L,)))
+                for b in itertools.combinations(range(1, L), S - 1))
+            assert got == pytest.approx(best), (trial, got, best)
+
+    def test_dp_respects_cut_cost(self):
+        """Huge transfer cost at one boundary: DP must avoid cutting
+        there even at some compute-imbalance price."""
+        comp = [1.0] * 6
+        cut = [0.0, 100.0, 0.0, 0.0, 0.0, 0.0]
+        part = dp_split(comp, cut, 2)
+        assert 2 not in part.boundaries
+
+    def test_partition_profile_roundtrip(self):
+        prof = synthetic_profile([1, 1, 8, 8, 1, 1])
+        assert partition_profile(prof, 3, method="dp").n_stages == 3
+        assert partition_profile(prof, 3, method="uniform").sizes() == \
+            (2, 2, 2)
+        with pytest.raises(ValueError):
+            partition_profile(prof, 3, method="nope")
+
+
+# ===========================================================================
+# schedule IR
+# ===========================================================================
+
+
+class TestScheduleIR:
+    @pytest.mark.parametrize("n", NS)
+    def test_paper_schedule_staleness_matches_eq5_eq6(self, n):
+        """Acceptance criterion: IR-derived (s_fwd, s_bwd) of the
+        round-robin emitter equal version_difference_paper for every
+        stage at N in {2,3,4,8}."""
+        sched = ir.round_robin_1f1b(n)
+        for k in range(n):
+            for phase in ("forward", "backward"):
+                assert sched.staleness(k, phase) == \
+                    st.version_difference_paper(k, n, phase), (n, k, phase)
+
+    @pytest.mark.parametrize("n", NS)
+    def test_stream_schedule_staleness_matches_closed_form(self, n):
+        sched = ir.streaming(n)
+        for k in range(n):
+            for phase in ("forward", "backward"):
+                assert sched.staleness(k, phase) == \
+                    st.version_difference_stream(k, n, phase), (n, k, phase)
+
+    @pytest.mark.parametrize("n", NS)
+    def test_gpipe_is_staleness_free(self, n):
+        sched = ir.gpipe(n)
+        for k in range(n):
+            assert sched.staleness(k, "forward") == 0
+            assert sched.staleness(k, "backward") == 0
+
+    @pytest.mark.parametrize("name", sorted(ir.EMITTERS))
+    @pytest.mark.parametrize("n", (1, 2, 4))
+    def test_dataflow_valid(self, name, n):
+        """Activations/cotangents always produced before consumed, and
+        every gradient applies after its own backward completes."""
+        ir.emit(name, n).validate()
+
+    @pytest.mark.parametrize("n", NS)
+    def test_stream_lags_match_runtime_constants(self, n):
+        """Injection→backward distance is 2(N−1)−k (warm-up gating and
+        batch-ring reads) and the same-stage fwd→bwd gap is 2(N−1−k)
+        (stash-ring gather offsets) — the two constant vectors
+        ``core/pipeline_stream.py`` is built around."""
+        sched = ir.streaming(n)
+        for k in range(n):
+            assert sched.bwd_lag(k) == 2 * (n - 1) - k
+            assert sched.fwd_bwd_gap(k) == 2 * (n - 1 - k)
+
+    def test_staleness_is_warmup_dependent(self):
+        """Early minibatches read the initial weights — the closed forms
+        only hold in steady state, which is exactly why the IR picks a
+        steady minibatch."""
+        sched = ir.round_robin_1f1b(4)
+        assert sched.staleness(0, "forward", mb=0) == 0
+        assert sched.staleness(0, "forward") == 3
+
+    def test_render_and_queries(self):
+        sched = ir.streaming(2, n_ticks=20)
+        out = sched.render(max_ticks=6)
+        assert out.count("\n") == 1 and "f0" in out
+        assert sched.makespan() == 20
+        bad = Schedule("bad", 2, [ir.Event(ir.FWD, 0, stage=1, mb=0),
+                                  ir.Event(ir.FWD, 1, stage=0, mb=0),
+                                  ir.Event(ir.BWD, 2, stage=1, mb=0),
+                                  ir.Event(ir.BWD, 3, stage=0, mb=0),
+                                  ir.Event(ir.UPDATE, 4, stages=(0, 1),
+                                           mbs=(0,))])
+        with pytest.raises(ValueError, match="timeline too short"):
+            bad.steady_minibatch()
+
+
+# ===========================================================================
+# plan() API
+# ===========================================================================
+
+
+class TestPlanAPI:
+    @pytest.mark.parametrize("schedule", sorted(ir.EMITTERS))
+    @pytest.mark.parametrize("n", NS)
+    def test_plan_matches_closed_forms(self, schedule, n):
+        p = plan(n_layers=2 * n, n_stages=n, schedule=schedule)
+        assert isinstance(p, PipelinePlan)
+        check_against_closed_forms(p)
+
+    def test_plan_from_config_profiles_and_partitions(self):
+        cfg = tiny_cfg("granite-8b", n_layers=4, pipe=2)
+        p = plan(cfg, n_stages=2, schedule="stream",
+                 profile_method="analytic")
+        assert p.partition.n_layers == 4
+        assert p.s_fwd == (2, 0) and p.s_bwd == (0, 0)
+        assert p.bwd_lag == (2, 1) and p.fb_gap == (2, 0)
+        assert p.ring_slots == 3
+        assert p.profile.method == "analytic"
+        assert "stream" in p.summary()
+
+    def test_plan_hlo_profile_counts_real_flops(self):
+        cfg = tiny_cfg("granite-8b", n_layers=2, pipe=2)
+        prof = profile_model(cfg, method="hlo", batch=1, seq=8)
+        assert prof.method == "hlo"
+        # at least the block's two attention projections + MLP matmuls
+        assert prof.layers[0].flops > 1e4
+        assert prof.n_layers == 2
+
+    def test_plan_reports_dp_win(self):
+        prof = synthetic_profile([1, 1, 1, 9, 9, 1, 1, 1])
+        p = plan(profile=prof, n_stages=4, partitioner="dp")
+        assert p.bottleneck_s < p.uniform_bottleneck_s
+
+    def test_plan_errors(self):
+        with pytest.raises(KeyError):
+            plan(n_layers=4, n_stages=2, schedule="zigzag")
+        with pytest.raises(ValueError):
+            plan(n_layers=2, n_stages=4)
+
+
+# ===========================================================================
+# round-trip: simulator
+# ===========================================================================
+
+
+def _data_iter(seed, batch=16, in_dim=8, classes=4):
+    k = jax.random.PRNGKey(seed)
+    wtrue = jax.random.normal(jax.random.PRNGKey(99), (in_dim, classes))
+    while True:
+        k, k1 = jax.random.split(k)
+        x = jax.random.normal(k1, (batch, in_dim))
+        yield {"x": x, "y": jnp.argmax(x @ wtrue, -1)}
+
+
+class TestSimulatorRoundTrip:
+    @pytest.mark.parametrize("scheme", Simulator.SCHEMES)
+    def test_default_plan_reproduces_planless_simulator(self, scheme):
+        """Acceptance criterion: Simulator(plan=round-robin plan) must be
+        step-for-step identical to the hardcoded-formula simulator."""
+        n = 4
+        fns, params = make_mlp_staged(
+            jax.random.PRNGKey(0), in_dim=8, width=16, depth=4,
+            n_classes=4, n_stages=n)
+        p = plan(n_layers=n, n_stages=n, schedule="1f1b_rr")
+        sim_plan = Simulator(fns, params, plan=p, scheme=scheme, lr=0.05)
+        sim_ref = Simulator(fns, params, n_stages=n, scheme=scheme, lr=0.05)
+        it1, it2 = _data_iter(0), _data_iter(0)
+        for _ in range(12):
+            m1 = sim_plan.step(next(it1))
+            m2 = sim_ref.step(next(it2))
+            assert m1["loss"] == m2["loss"]
+        for a, b in zip(jax.tree.leaves(sim_plan.params),
+                        jax.tree.leaves(sim_ref.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_stream_plan_through_simulator(self):
+        """Arbitrary-schedule support: the simulator executes the
+        streaming schedule's staleness structure and still converges."""
+        n = 4
+        fns, params = make_mlp_staged(
+            jax.random.PRNGKey(0), in_dim=8, width=16, depth=4,
+            n_classes=4, n_stages=n)
+        p = plan(n_layers=n, n_stages=n, schedule="stream")
+        sim = Simulator(fns, params, plan=p, scheme="spectrain", lr=0.05)
+        it = _data_iter(0)
+        losses = [sim.step(next(it))["loss"] for _ in range(60)]
+        assert np.isfinite(losses).all()
+        assert np.mean(losses[-10:]) < np.mean(losses[:10])
+
+    def test_plan_stage_mismatch_raises(self):
+        fns, params = make_mlp_staged(
+            jax.random.PRNGKey(0), in_dim=8, width=16, depth=4,
+            n_classes=4, n_stages=4)
+        p = plan(n_layers=4, n_stages=2)
+        with pytest.raises(ValueError):
+            Simulator(fns, params, n_stages=4, plan=p)
+        with pytest.raises(ValueError):
+            Simulator(fns, params)  # neither n_stages nor plan
+
+
+# ===========================================================================
+# round-trip: streaming pipeline runtime
+# ===========================================================================
+
+
+class TestStreamRuntimeRoundTrip:
+    def test_stream_plan_reproduces_planless_runtime(self):
+        """pipeline_stream under an explicit stream plan is bit-identical
+        to the closed-form constants it replaces."""
+        cfg = tiny_cfg("granite-8b", n_layers=4, pipe=2)
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = lm_batch(jax.random.PRNGKey(1), cfg, batch=4, seq=16)
+        sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+        p = plan(cfg, n_stages=2, schedule="stream",
+                 profile_method="analytic")
+
+        s1 = pipeline_stream.make_state(m, params, sds, plan=p)
+        f1 = jax.jit(pipeline_stream.make_train_step(
+            m, mode="spectrain", lr=0.05, plan=p))
+        s2 = pipeline_stream.make_state(m, params, sds)
+        f2 = jax.jit(pipeline_stream.make_train_step(
+            m, mode="spectrain", lr=0.05))
+        for _ in range(6):
+            s1, m1 = f1(s1, batch)
+            s2, m2 = f2(s2, batch)
+            assert float(m1["loss"]) == float(m2["loss"])
+        for a, b in zip(jax.tree.leaves(s1["params"]),
+                        jax.tree.leaves(s2["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_non_stream_plan_rejected(self):
+        """Both state construction and step construction must reject a
+        non-stream plan — otherwise the plan's smaller ring sizes would
+        silently corrupt the stash gathers."""
+        cfg = tiny_cfg("granite-8b", n_layers=4, pipe=2)
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            lm_batch(jax.random.PRNGKey(1), cfg, batch=4, seq=16))
+        p = plan(cfg, n_stages=2, schedule="1f1b_rr",
+                 profile_method="analytic")
+        with pytest.raises(ValueError, match="stream"):
+            pipeline_stream.make_train_step(m, mode="spectrain", lr=0.05,
+                                            plan=p)
+        with pytest.raises(ValueError, match="stream"):
+            pipeline_stream.make_state(m, params, sds, plan=p)
+
+    def test_plan_profiles_at_run_shape(self):
+        """batch/seq forwarded into the profile (the printed bottleneck
+        describes the shapes the run executes)."""
+        cfg = tiny_cfg("granite-8b", n_layers=4, pipe=2)
+        p8 = plan(cfg, n_stages=2, schedule="stream", batch=1, seq=8)
+        p64 = plan(cfg, n_stages=2, schedule="stream", batch=1, seq=64)
+        assert p64.profile.seq == 64 and p8.profile.seq == 8
+        assert p64.bottleneck_s > p8.bottleneck_s

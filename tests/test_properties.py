@@ -3,11 +3,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import spectrain
-from repro.models.layers import apply_rope, rope_freqs, softmax_xent
-from repro.optim import sgd
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import spectrain  # noqa: E402
+from repro.models.layers import apply_rope, rope_freqs, softmax_xent  # noqa: E402
+from repro.optim import sgd  # noqa: E402
 
 
 class FakeCfg:
