@@ -24,10 +24,20 @@ Backward uses stored stage *inputs* plus recompute (remat), so the rings
 hold one activation tensor per (stage, in-flight microbatch) — the same
 memory PipeDream's activation stashing pays, and ~L× less than storing
 residuals.
+
+Stage parameters are **ragged per-stage trees**: ``state["params"]
+["stages"]`` is a tuple of ``S`` pytrees whose ``layers`` leaves are
+``[L_k, ...]`` for the plan's per-stage layer counts.  Activations are
+``d_model``-wide at every cut, so the rings stay uniform ``[S, ...]``
+arrays — only weights (and their momentum/stash/prediction mirrors) go
+ragged.  A planner ``PipelinePlan`` with a non-uniform (DP) partition is
+therefore *executed*, not just logged: ``make_state`` regroups the
+canonical stacked init layout via ``Model.partition_stage_params`` and
+validates the plan's layer ranges against the model.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,6 +80,34 @@ def _plan_vectors(S: int, plan):
     return list(plan.s_fwd), list(plan.bwd_lag), list(plan.fb_gap)
 
 
+def stage_sizes(model, plan) -> Tuple[int, ...]:
+    """Per-stage layer counts this runtime executes.
+
+    Without a plan: the uniform split the model was initialized with.
+    With a plan: the plan's partition, validated as an *executable*
+    artifact — its layer ranges must tile exactly the model's layers
+    across exactly the model's stages (a plan built against a different
+    model fails here rather than silently mis-slicing weights).
+    """
+    S = model.n_stages
+    if plan is None:
+        return (model.layers_per_stage,) * S
+    part = plan.partition
+    if part.n_stages != plan.n_stages:
+        raise ValueError(f"plan partition has {part.n_stages} stages but "
+                         f"plan.n_stages={plan.n_stages}")
+    if part.n_layers != model.cfg.n_layers:
+        raise ValueError(
+            f"plan partitions {part.n_layers} layers, model has "
+            f"{model.cfg.n_layers}")
+    sizes = part.sizes()
+    if len(sizes) != S:
+        raise ValueError(f"plan has {len(sizes)} stages, model has {S}")
+    if min(sizes) < 1:
+        raise ValueError(f"plan has an empty stage: sizes={sizes}")
+    return sizes
+
+
 def _ring_write(ring, idx, val):
     """ring leaves [R, ...]; write val at slot idx (traced scalar)."""
     return jax.tree.map(
@@ -92,17 +130,21 @@ def _per_stage_gather(ring, idx_vec):
     return jax.tree.map(leaf, ring)
 
 
-def _stash_weights(w_stash, stages, slot):
-    """w_stash leaves [S, R, ...]; write current stage weights at slot."""
-    return jax.tree.map(
-        lambda r, w: jax.lax.dynamic_update_index_in_dim(
-            r, w.astype(r.dtype), slot, 1), w_stash, stages)
+def _predict_stages(stage_trees, mom_trees, lr, s_fwd_v):
+    """Eq. 4 per stage tree with that stage's (python int) distance."""
+    return tuple(
+        st.predict_weights(w, v, lr, s)
+        for w, v, s in zip(stage_trees, mom_trees, s_fwd_v))
 
 
 def make_state(model, params, batch_sds, *, mode: str = "spectrain",
                ticks_per_step: int = 1,
                fused_predict: bool = False, plan=None) -> Dict[str, Any]:
     """Streaming train state: params + momentum + in-flight rings.
+
+    ``params`` is the canonical stacked init layout; for S > 1 its stage
+    weights are regrouped into ragged per-stage trees according to the
+    plan's partition (uniform without a plan) — see module docstring.
 
     ``ticks_per_step``: the global batch is split into this many per-tick
     minibatches; one train_step runs that many ticks via lax.scan (the
@@ -114,24 +156,34 @@ def make_state(model, params, batch_sds, *, mode: str = "spectrain",
     forward reads 2-byte weights."""
     cfg = model.cfg
     S = model.n_stages
+    if S == 1:
+        return {
+            "params": params,
+            "momentum": sgd.init(params).v,
+            "step": jnp.zeros((), jnp.int32),
+        }
+    # _plan_vectors and stage_sizes validate the plan (stream schedule,
+    # stage count, layer coverage) so a mismatched plan fails here rather
+    # than under-sizing the rings or mis-slicing the stage weights that a
+    # (plan-less or otherwise) train step later indexes.
+    _, lag, gap = _plan_vectors(S, plan)
+    sizes = stage_sizes(model, plan)
+    params = {"outer": params["outer"],
+              "stages": model.partition_stage_params(params["stages"],
+                                                     sizes)}
     state: Dict[str, Any] = {
         "params": params,
         "momentum": sgd.init(params).v,
         "step": jnp.zeros((), jnp.int32),
     }
-    if S == 1:
-        return state
     if fused_predict and mode == "spectrain":
         cdt = jnp.dtype(cfg.compute_dtype)
         state["pred"] = {
             "outer": jax.tree.map(lambda p: p.astype(cdt), params["outer"]),
-            "stages": jax.tree.map(lambda p: p.astype(cdt),
-                                   params["stages"]),
+            "stages": tuple(
+                jax.tree.map(lambda p: p.astype(cdt), t)
+                for t in params["stages"]),
         }
-    # _plan_vectors validates the plan (stream schedule, stage count) so
-    # a mismatched plan fails here rather than silently under-sizing the
-    # rings that a (plan-less or otherwise) train step later indexes.
-    _, lag, gap = _plan_vectors(S, plan)
     R = max(max(lag), max(gap)) + 1
     tok_sds = batch_sds["tokens"]
     B, seq = tok_sds.shape[0], tok_sds.shape[1]
@@ -149,10 +201,13 @@ def make_state(model, params, batch_sds, *, mode: str = "spectrain",
             batch_sds),
     })
     if mode == "pipedream":
-        state["w_stash"] = jax.tree.map(
-            lambda p: jnp.broadcast_to(
-                p[:, None], (p.shape[0], R) + p.shape[1:]),
-            params["stages"])
+        # per-stage weight rings: leaves [R, ...] mirroring each ragged
+        # stage tree (the stacked layout had a single [S, R, ...] ring)
+        state["w_stash"] = tuple(
+            jax.tree.map(
+                lambda p: jnp.broadcast_to(p[None], (R,) + p.shape),
+                t)
+            for t in params["stages"])
     return state
 
 
@@ -173,23 +228,24 @@ def make_train_step(model, *, mode: str = "spectrain", lr: float,
     half the bytes (standard mixed-precision training).
     ``plan``: optional ``repro.planner.PipelinePlan`` (stream schedule);
     supplies the IR-derived prediction distances and ring offsets in
-    place of the closed-form constants."""
+    place of the closed-form constants, and its partition (validated by
+    ``make_state``) determines the ragged stage trees this step
+    executes."""
     assert mode in MODES, mode
     fused_predict = fused_predict and mode == "spectrain"
     S = model.n_stages
     s_fwd_v, bwd_lag, fb_gap = _plan_vectors(S, plan)
+    if plan is not None:
+        stage_sizes(model, plan)   # fail fast on an unexecutable plan
     R = max(max(bwd_lag), max(fb_gap)) + 1
     s_fwd_embed = float(s_fwd_v[0])
     g_vec = jnp.array(fb_gap, jnp.int32)       # stash gather offsets
     lag_vec = jnp.array(bwd_lag, jnp.int32)    # injection -> bwd ticks
-    s_fwd = jnp.array(s_fwd_v, jnp.float32)
+    s_fwd_v = [float(s) for s in s_fwd_v]
 
     def stage_fn(sp, xk):
         xk, aux = model.stage_apply(sp, (xk, jnp.zeros((), jnp.float32)))
         return xk, aux
-
-    def vstages(sp, xs):
-        return jax.vmap(stage_fn)(sp, xs)
 
     # ------------------------------------------------------------- S == 1
     def step_degenerate(state, batch):
@@ -220,8 +276,7 @@ def make_train_step(model, *, mode: str = "spectrain", lr: float,
             stages_f = state["pred"]["stages"]
             outer_embed_f = state["pred"]["outer"]
         elif mode == "spectrain":
-            stages_f = st.predict_weights_stacked(stages, mom_stages,
-                                                  lr, s_fwd)
+            stages_f = _predict_stages(stages, mom_stages, lr, s_fwd_v)
             outer_embed_f = st.predict_weights(outer, mom_outer, lr,
                                                s_fwd_embed)
         else:
@@ -231,7 +286,8 @@ def make_train_step(model, *, mode: str = "spectrain", lr: float,
         x_new = model.embed(outer_embed_f, batch)
         A = state["fwd_buf"].at[0].set(x_new)
         A = shard_act(A, "stage", "act_batch", None, None)
-        out, _ = vstages(stages_f, A)
+        outs = [stage_fn(stages_f[k], A[k]) for k in range(S)]
+        out = jnp.stack([o for o, _aux in outs])
 
         slot = jnp.mod(t, R)
         stash = jax.lax.dynamic_update_index_in_dim(
@@ -256,14 +312,21 @@ def make_train_step(model, *, mode: str = "spectrain", lr: float,
         aux_cot = valid_b.astype(jnp.float32)
 
         if mode == "pipedream":
-            stages_b = _per_stage_gather(state["w_stash"], idx)
+            stages_b = tuple(_ring_read(state["w_stash"][k], idx[k])
+                             for k in range(S))
         else:
             stages_b = stages
         if bwd_dtype is not None:
             bdt = jnp.dtype(bwd_dtype)
-            stages_b = jax.tree.map(lambda p: p.astype(bdt), stages_b)
-        _, bwd_vjp = jax.vjp(vstages, stages_b, X_b)
-        gW, gX = bwd_vjp((B_cot, aux_cot))
+            stages_b = tuple(jax.tree.map(lambda p: p.astype(bdt), t_)
+                             for t_ in stages_b)
+        gW, gXs = [], []
+        for k in range(S):
+            _, vjp_k = jax.vjp(stage_fn, stages_b[k], X_b[k])
+            gw_k, gx_k = vjp_k((B_cot[k], aux_cot[k]))
+            gW.append(gw_k)
+            gXs.append(gx_k)
+        gX = jnp.stack(gXs)
 
         # ---------- embed backward -----------------------------------------
         old_batch = _ring_read(batch_ring, jnp.mod(t - lag_vec[0], R))
@@ -271,7 +334,7 @@ def make_train_step(model, *, mode: str = "spectrain", lr: float,
         (g_outer_embed,) = evjp(gX[0] * valid_b[0].astype(gX.dtype))
 
         g_outer = jax.tree.map(jnp.add, g_outer_head, g_outer_embed)
-        grads = {"outer": g_outer, "stages": gW}
+        grads = {"outer": g_outer, "stages": tuple(gW)}
         if clip:
             grads, _ = sgd.clip_by_global_norm(grads, clip)
 
@@ -284,11 +347,11 @@ def make_train_step(model, *, mode: str = "spectrain", lr: float,
             # kernel's schedule): for tick t+1, Ŵ = W_{t+1} − s·η·v_t.
             cdt = jnp.dtype(model.cfg.compute_dtype)
             new_pred = {
-                "stages": jax.tree.map(
-                    lambda p: p.astype(cdt),
-                    st.predict_weights_stacked(
-                        new_params["stages"], new_mom.v["stages"],
-                        lr, s_fwd)),
+                "stages": tuple(
+                    jax.tree.map(lambda p: p.astype(cdt), t_)
+                    for t_ in _predict_stages(new_params["stages"],
+                                              new_mom.v["stages"],
+                                              lr, s_fwd_v)),
                 "outer": jax.tree.map(
                     lambda p: p.astype(cdt),
                     st.predict_weights(new_params["outer"],
@@ -308,8 +371,9 @@ def make_train_step(model, *, mode: str = "spectrain", lr: float,
             "stash_x": stash, "batch_ring": batch_ring,
         }
         if mode == "pipedream":
-            new_state["w_stash"] = _stash_weights(
-                state["w_stash"], stages, slot)
+            new_state["w_stash"] = tuple(
+                _ring_write(state["w_stash"][k], slot, stages[k])
+                for k in range(S))
         if new_pred is not None:
             new_state["pred"] = new_pred
         return new_state, {"loss": loss, "loss_valid": valid_head}

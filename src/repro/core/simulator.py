@@ -66,6 +66,15 @@ class Simulator:
             n_stages = plan.n_stages
             self.s_fwd = tuple(plan.s_fwd)
             self.s_bwd = tuple(plan.s_bwd)
+            # ragged-stage accounting: the per-stage staleness vectors
+            # must describe exactly the stage list we execute — a plan
+            # whose partition disagrees with the params' stage count
+            # would silently pair stage k's weights with stage j's s.
+            got = len(params["stages"])
+            if got != plan.n_stages:
+                raise ValueError(
+                    f"params have {got} stage trees but plan has "
+                    f"{plan.n_stages} stages")
         else:
             if not n_stages:
                 raise ValueError("need n_stages or a plan")
@@ -215,12 +224,25 @@ class Simulator:
 
 
 def make_mlp_staged(key, *, in_dim: int, width: int, depth: int,
-                    n_classes: int, n_stages: int
+                    n_classes: int, n_stages: int,
+                    sizes: Optional[Sequence[int]] = None
                     ) -> Tuple[StagedFns, Any]:
-    """SNN-style stacked-FC model split into ``n_stages`` equal stages."""
-    assert depth % n_stages == 0
-    lps = depth // n_stages
+    """SNN-style stacked-FC model split into ``n_stages`` stages.
+
+    ``sizes``: per-stage layer counts (ragged, e.g. a DP partition's
+    ``sizes()``); defaults to the uniform split (requires divisibility).
+    """
+    if sizes is None:
+        assert depth % n_stages == 0
+        sizes = (depth // n_stages,) * n_stages
+    sizes = tuple(int(n) for n in sizes)
+    if len(sizes) != n_stages or sum(sizes) != depth or min(sizes) < 1:
+        raise ValueError(f"sizes {sizes} do not split {depth} layers "
+                         f"into {n_stages} stages")
     keys = jax.random.split(key, depth + 2)
+    bounds = [0]
+    for n in sizes:
+        bounds.append(bounds[-1] + n)
 
     def dense(k, fan_in, fan_out):
         w = jax.random.normal(k, (fan_in, fan_out)) / jnp.sqrt(fan_in)
@@ -230,8 +252,8 @@ def make_mlp_staged(key, *, in_dim: int, width: int, depth: int,
         "outer": {"in": dense(keys[0], in_dim, width),
                   "out": dense(keys[1], width, n_classes)},
         "stages": [
-            {"layers": [dense(keys[2 + s * lps + j], width, width)
-                        for j in range(lps)]}
+            {"layers": [dense(keys[2 + j], width, width)
+                        for j in range(bounds[s], bounds[s + 1])]}
             for s in range(n_stages)],
     }
 
@@ -252,19 +274,27 @@ def make_mlp_staged(key, *, in_dim: int, width: int, depth: int,
     return StagedFns(embed, stage, head_loss), params
 
 
-def staged_from_model(model) -> Tuple[StagedFns, Callable[[Any], Any]]:
+def staged_from_model(model, partition=None
+                      ) -> Tuple[StagedFns, Callable[[Any], Any]]:
     """Adapt a repro.models.Model into StagedFns.
 
     Returns (fns, repack) where ``repack(model_params)`` produces the
-    simulator param layout.
+    simulator param layout.  ``partition``: an optional planner
+    ``Partition`` — repack then builds ragged per-stage trees from its
+    layer ranges (``stage_apply`` reads each stage's layer count off the
+    tree), so non-uniform DP splits simulate as they execute.
     """
-    from repro.models.model import tree_slice
+    if partition is not None and partition.n_layers != model.cfg.n_layers:
+        raise ValueError(f"partition covers {partition.n_layers} layers, "
+                         f"model has {model.cfg.n_layers}")
+    sizes = (partition.sizes() if partition is not None
+             else (model.layers_per_stage,) * model.n_stages)
 
     def repack(params):
         return {
             "outer": {"in": params["outer"], "out": params["outer"]},
-            "stages": [tree_slice(params["stages"], s)
-                       for s in range(model.n_stages)],
+            "stages": list(model.partition_stage_params(params["stages"],
+                                                        sizes)),
         }
 
     def embed(outer_in, batch):

@@ -99,7 +99,10 @@ def main(argv=None) -> int:
 
     # profile-guided plan: partition + IR-derived staleness for the
     # schedule this run executes (gpipe for the sync fill/drain pipeline,
-    # the streaming tick schedule otherwise)
+    # the streaming tick schedule otherwise).  The partition is executed:
+    # pipeline_stream regroups stage weights into ragged per-stage trees
+    # by its layer ranges, so --partitioner dp changes which layers each
+    # stage runs, not just the printed bottleneck.
     pplan = make_plan(
         cfg, n_stages=model.n_stages,
         schedule="gpipe" if args.mode == "sync" else "stream",
@@ -107,6 +110,13 @@ def main(argv=None) -> int:
         batch=args.batch, seq=args.seq)
     check_against_closed_forms(pplan)
     print(f"# {pplan.summary()}")
+    stage_desc = " ".join(
+        f"s{k}:L[{lo}:{hi})={c:.2e}s"
+        for k, ((lo, hi), c) in enumerate(zip(pplan.stage_ranges,
+                                              pplan.stage_costs_s)))
+    print(f"# realized stages: {stage_desc}  "
+          f"bottleneck={pplan.bottleneck_s:.2e}s "
+          f"(uniform would be {pplan.uniform_bottleneck_s:.2e}s)")
 
     if args.mode == "sync":
         state = pipeline_sync.init_state(model, key)

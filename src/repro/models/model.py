@@ -96,8 +96,11 @@ class Model:
         return body
 
     def stage_apply(self, stage_params, carry, *, pos_offset: int = 0):
-        """One pipeline stage: ``layers_per_stage`` blocks (+ hybrid shared
-        block).  carry = (x [b,s,d], aux scalar)."""
+        """One pipeline stage: its blocks (+ hybrid shared block).
+
+        The layer count is read off the param tree's leading axis, so the
+        same code executes uniform stages and ragged (plan-partitioned)
+        stages.  carry = (x [b,s,d], aux scalar)."""
         cfg = self.cfg
         body = self._layer_body(pos_offset=pos_offset)
         layers = stage_params["layers"]
@@ -105,7 +108,7 @@ class Model:
             carry, _ = jax.lax.scan(body, carry, layers)
             return carry
         k = cfg.ssm.shared_attn_every
-        n = self.layers_per_stage
+        n = jax.tree.leaves(layers)[0].shape[0]
         lo = 0
         while lo < n:
             hi = min(lo + k, n)
@@ -153,7 +156,9 @@ class Model:
         x = self.embed(outer, batch)
         carry = (x, jnp.zeros((), jnp.float32))
         for s in range(self.n_stages):
-            carry = self.stage_apply(tree_slice(stages, s), carry)
+            sp = (stages[s] if isinstance(stages, (tuple, list))
+                  else tree_slice(stages, s))
+            carry = self.stage_apply(sp, carry)
         return carry
 
     def forward(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -237,6 +242,76 @@ class Model:
         """Merge [S, Lps, ...] stacked layer params to [L, ...]."""
         return jax.tree.map(
             lambda a: a.reshape((-1,) + a.shape[2:]), stages["layers"])
+
+    # --------------------------------------------------------- ragged stages
+    def partition_stage_params(self, stages, sizes):
+        """Regroup canonical stacked stage params into per-stage trees.
+
+        ``stages`` is the init/checkpoint layout (leaves [S, Lps, ...]);
+        ``sizes`` is a per-stage layer-count vector (a planner
+        ``Partition.sizes()``), summing to ``cfg.n_layers``.  Returns a
+        tuple of ``len(sizes)`` stage trees whose ``layers`` leaves are
+        [sizes[k], ...] — the ragged layout the streaming runtime
+        executes, realizing non-uniform (DP) plans.
+        """
+        if sum(sizes) != self.cfg.n_layers:
+            raise ValueError(f"partition sizes {tuple(sizes)} do not cover "
+                             f"{self.cfg.n_layers} layers")
+        if len(sizes) != self.n_stages:
+            raise ValueError(f"{len(sizes)} partition stages for a "
+                             f"{self.n_stages}-stage model")
+        if min(sizes) < 1:
+            raise ValueError(f"empty stage in partition sizes {tuple(sizes)}")
+        flat = self.flat_layers(stages)
+        out, lo = [], 0
+        for k, n in enumerate(sizes):
+            tree: Dict[str, Any] = {
+                "layers": tree_slice_range(flat, lo, lo + n)}
+            if "shared" in stages:
+                tree["shared"] = tree_slice(stages["shared"], k)
+            out.append(tree)
+            lo += n
+        return tuple(out)
+
+    def stack_stage_params(self, stage_trees):
+        """Inverse of :meth:`partition_stage_params` for uniform sizes:
+        per-stage trees back to the canonical stacked [S, Lps, ...]
+        layout (requires equal layer counts)."""
+        sizes = {jax.tree.leaves(t["layers"])[0].shape[0]
+                 for t in stage_trees}
+        if len(sizes) != 1:
+            raise ValueError("cannot stack ragged stages "
+                             f"(sizes {sorted(sizes)}); uniform only")
+        out: Dict[str, Any] = {"layers": jax.tree.map(
+            lambda *xs: jnp.stack(xs, 0), *[t["layers"]
+                                            for t in stage_trees])}
+        if "shared" in stage_trees[0]:
+            out["shared"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs, 0), *[t["shared"]
+                                                for t in stage_trees])
+        return out
+
+    def ragged_stage_axes(self, n_stages: int):
+        """Logical-axis pytree matching :meth:`partition_stage_params`
+        output: the stacked axes with the leading 'stage' dim dropped
+        ('layer' keeps naming each stage tree's leading dim).
+
+        Dropping 'stage' means ragged stage weights are *replicated*
+        over the pipe mesh axis rather than placed stage-k-on-device-k
+        as the stacked [S, ...] leaves were: per-stage placement of
+        differently-shaped trees is MPMD, which a PartitionSpec on a
+        (now nonexistent) leading axis cannot express — see the ROADMAP
+        follow-up on explicit per-stage device placement."""
+        ax = self.param_axes()["stages"]
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x)
+        one: Dict[str, Any] = {
+            "layers": jax.tree.map(lambda a: a[1:], ax["layers"],
+                                   is_leaf=is_axes)}
+        if "shared" in ax:
+            one["shared"] = jax.tree.map(lambda a: a[1:], ax["shared"],
+                                         is_leaf=is_axes)
+        return tuple(one for _ in range(n_stages))
 
     def init_cache(self, batch: int, max_seq: int):
         cfg = self.cfg

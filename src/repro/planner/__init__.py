@@ -27,7 +27,10 @@ This subsystem makes both explicit and checkable:
   ``api``           ``plan(config, n_stages) -> PipelinePlan``, consumed
                     by ``core/simulator.py`` (arbitrary-schedule
                     staleness), ``core/pipeline_stream.py`` (prediction
-                    distances + ring offsets) and ``launch/train.py``.
+                    distances + ring offsets, and the partition itself —
+                    the runtime regroups stage weights into ragged
+                    per-stage trees by the plan's layer ranges, so DP
+                    splits execute) and ``launch/train.py``.
 
 Quick start::
 
@@ -37,7 +40,8 @@ Quick start::
 """
 from repro.planner.api import (PipelinePlan, SCHEDULES,
                                check_against_closed_forms, plan)
-from repro.planner.partition import Partition, dp_split, uniform
+from repro.planner.partition import (Partition, dp_split,
+                                     profile_stage_costs, uniform)
 from repro.planner.profiler import (LayerProfile, ModelProfile,
                                     profile_model, synthetic_profile)
 from repro.planner.schedule_ir import (Event, Schedule, emit, gpipe,
@@ -45,7 +49,7 @@ from repro.planner.schedule_ir import (Event, Schedule, emit, gpipe,
 
 __all__ = [
     "PipelinePlan", "SCHEDULES", "plan", "check_against_closed_forms",
-    "Partition", "dp_split", "uniform",
+    "Partition", "dp_split", "profile_stage_costs", "uniform",
     "LayerProfile", "ModelProfile", "profile_model", "synthetic_profile",
     "Event", "Schedule", "emit", "gpipe", "round_robin_1f1b", "streaming",
 ]

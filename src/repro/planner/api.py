@@ -29,8 +29,12 @@ class PipelinePlan:
     long a minibatch's gradient is in flight); ``fb_gap`` is the
     same-stage forward→backward distance (how long each stage stashes an
     input activation — the streaming runtime's ring gather offsets);
-    ``partition`` maps layers to stages; ``bottleneck_s`` is the
-    modelled slowest-stage time.
+    ``partition`` maps layers to stages — an *executable* artifact: the
+    streaming runtime regroups stage weights by its layer ranges
+    (``stage_ranges``) and validates them against the model at state
+    construction, so non-uniform (DP) partitions are run, not just
+    logged; ``stage_costs_s`` is the modelled per-stage time under that
+    partition and ``bottleneck_s`` its max (the slowest stage).
     """
     n_stages: int
     schedule: str
@@ -42,9 +46,19 @@ class PipelinePlan:
     partitioner: str = "uniform"
     bottleneck_s: float = 0.0
     uniform_bottleneck_s: float = 0.0
+    stage_costs_s: Tuple[float, ...] = ()
     profile: Optional[pf.ModelProfile] = field(default=None, repr=False)
     ir: Optional[ir.Schedule] = field(default=None, repr=False, hash=False,
                                       compare=False)
+
+    @property
+    def stage_ranges(self) -> Tuple[Tuple[int, int], ...]:
+        """Per-stage [lo, hi) layer index ranges the runtime executes."""
+        return self.partition.stages()
+
+    @property
+    def stage_sizes(self) -> Tuple[int, ...]:
+        return self.partition.sizes()
 
     def staleness(self, stage: int, phase: str) -> int:
         vec = self.s_fwd if phase == "forward" else self.s_bwd
@@ -94,7 +108,8 @@ def plan(config=None, n_stages: int = 2, *, schedule: str = "1f1b_rr",
                          f"{n_stages} stages")
 
     part = pt.partition_profile(profile, n_stages, method=partitioner)
-    cost = pt.profile_bottleneck(profile, part)
+    costs = pt.profile_stage_costs(profile, part)
+    cost = max(costs)
     ucost = pt.profile_bottleneck(
         profile, pt.uniform(profile.n_layers, n_stages))
 
@@ -111,7 +126,8 @@ def plan(config=None, n_stages: int = 2, *, schedule: str = "1f1b_rr",
         n_stages=n_stages, schedule=schedule, s_fwd=s_fwd, s_bwd=s_bwd,
         bwd_lag=bwd_lag, fb_gap=fb_gap,
         partition=part, partitioner=partitioner,
-        bottleneck_s=cost, uniform_bottleneck_s=ucost, profile=profile,
+        bottleneck_s=cost, uniform_bottleneck_s=ucost,
+        stage_costs_s=costs, profile=profile,
         ir=sched if keep_ir else None)
 
 

@@ -177,3 +177,15 @@ def profile_bottleneck(profile, part: Partition, *,
     compute, cut = _costs_from_profile(profile, peak_flops=peak_flops,
                                        link_bw=link_bw)
     return bottleneck(compute, cut, part)
+
+
+def profile_stage_costs(profile, part: Partition, *,
+                        peak_flops: float = PEAK_FLOPS,
+                        link_bw: float = LINK_BW) -> Tuple[float, ...]:
+    """Modelled per-stage seconds (compute + incoming cut) for a
+    partition — the realized per-stage cost a run under this plan pays;
+    its max is :func:`profile_bottleneck`."""
+    compute, cut = _costs_from_profile(profile, peak_flops=peak_flops,
+                                       link_bw=link_bw)
+    return tuple(stage_cost(compute, cut, lo, hi)
+                 for lo, hi in part.stages())

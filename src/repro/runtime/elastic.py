@@ -26,19 +26,54 @@ def restack_stages(stages: Any, new_pipe: int) -> Any:
     return jax.tree.map(leaf, stages)
 
 
+def _flat_layers(stages: Any) -> Any:
+    """[L, ...] flat layer tree from stacked stage params or the
+    streaming runtime's ragged per-stage trees."""
+    if isinstance(stages, (tuple, list)):
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                            *[t["layers"] for t in stages])
+    return jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]),
+                        stages["layers"])
+
+
+def _shared_blocks(stages: Any) -> Optional[Any]:
+    if isinstance(stages, (tuple, list)):
+        if "shared" not in stages[0]:
+            return None
+        return jax.tree.map(lambda *xs: jnp.stack(xs, 0),
+                            *[t["shared"] for t in stages])
+    return stages.get("shared")
+
+
 def reshard_params(params: Dict[str, Any], *, new_pipe: int,
                    old_pipe: Optional[int] = None) -> Dict[str, Any]:
+    """Re-factor stage params (stacked or ragged) to the canonical
+    stacked layout for ``new_pipe`` stages, preserving flat layer
+    order.  Stage layouts without a layer stack (e.g. enc-dec
+    ``{"enc", "dec"}``) pass through untouched, as do any extra stage
+    keys."""
     out = dict(params)
-    stages = dict(params["stages"])
-    if "layers" in stages:
-        stages["layers"] = restack_stages(
-            {"x": stages["layers"]}, new_pipe)["x"]
+    raw = params["stages"]
+    if not isinstance(raw, (tuple, list)) and "layers" not in raw:
+        out["stages"] = dict(raw)
+        return out
+    flat = _flat_layers(raw)
+
+    def leaf(a):
+        if a.shape[0] % new_pipe:
+            raise ValueError(
+                f"{a.shape[0]} layers not divisible by {new_pipe}")
+        return a.reshape((new_pipe, a.shape[0] // new_pipe) + a.shape[1:])
+
+    stages: Dict[str, Any] = (dict(raw) if isinstance(raw, dict) else {})
+    stages["layers"] = jax.tree.map(leaf, flat)
     # per-stage shared blocks (zamba2) replicate/slice to the new count
-    if "shared" in stages:
-        def leaf(a):
+    shared = _shared_blocks(params["stages"])
+    if shared is not None:
+        def sleaf(a):
             reps = (new_pipe + a.shape[0] - 1) // a.shape[0]
             return jnp.tile(a, (reps,) + (1,) * (a.ndim - 1))[:new_pipe]
-        stages["shared"] = jax.tree.map(leaf, stages["shared"])
+        stages["shared"] = jax.tree.map(sleaf, shared)
     out["stages"] = stages
     return out
 
@@ -54,13 +89,19 @@ def elastic_restate(model_old, model_new, state: Dict[str, Any],
     new_state = pipeline_stream.make_state(
         model_new, params, batch_sds, mode=mode,
         ticks_per_step=ticks_per_step)
-    # momentum carries over (same restack), so prediction stays warm
-    mom = dict(state["momentum"])
-    mom_stages = dict(mom["stages"]) if isinstance(mom.get("stages"), dict) \
-        else mom["stages"]
-    new_mom = {"outer": mom["outer"],
-               "stages": reshard_params({"stages": mom["stages"]},
-                                        new_pipe=model_new.n_stages)["stages"]}
-    new_state["momentum"] = new_mom
+    # momentum carries over (same restack), so prediction stays warm;
+    # mirror the layout make_state chose for the new params (ragged
+    # per-stage trees when model_new pipelines, stacked otherwise)
+    mom_stacked = reshard_params(
+        {"stages": state["momentum"]["stages"]},
+        new_pipe=model_new.n_stages)["stages"]
+    if isinstance(new_state["params"]["stages"], (tuple, list)):
+        mom_stages: Any = model_new.partition_stage_params(
+            mom_stacked,
+            (model_new.layers_per_stage,) * model_new.n_stages)
+    else:
+        mom_stages = mom_stacked
+    new_state["momentum"] = {"outer": state["momentum"]["outer"],
+                             "stages": mom_stages}
     new_state["step"] = state["step"]
     return new_state

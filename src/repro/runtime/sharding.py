@@ -129,9 +129,22 @@ _RING_TP = True
 
 def stream_state_shardings(model, state_sds: Dict[str, Any], mesh: Mesh,
                            rules: Dict[str, AxisVal], *, zero1: bool = True):
-    """NamedShardings for the streaming (or sync) train state."""
+    """NamedShardings for the streaming (or sync) train state.
+
+    Handles both the canonical stacked param layout (sync pipeline /
+    single stage) and the streaming runtime's ragged per-stage trees —
+    detected off the state's ``stages`` entry being a tuple/list, whose
+    matching axes tree drops the leading 'stage' dim per leaf."""
     sizes = axis_sizes(mesh)
     param_axes = model.param_axes()
+    p_sds = state_sds.get("params", {})
+    ragged = isinstance(p_sds.get("stages") if isinstance(p_sds, dict)
+                        else None, (tuple, list))
+    if ragged:
+        stage_axes = model.ragged_stage_axes(len(p_sds["stages"]))
+        # match the state's container type so tree structures zip
+        param_axes = {"outer": param_axes["outer"],
+                      "stages": type(p_sds["stages"])(stage_axes)}
     act_rules = dict(rules)
     act_rules["act_embed"] = "tensor" if _RING_TP else None
     rep = NamedSharding(mesh, P())
@@ -169,11 +182,18 @@ def stream_state_shardings(model, state_sds: Dict[str, Any], mesh: Mesh,
             state_sds["batch_ring"])
     if "w_stash" in state_sds:
         stash_rules = dict(rules)
+        # ragged stash leaves are [R, ...] (ring first); stacked were
+        # [S, R, ...] (stage, then ring)
+        ring_ax = ((lambda ax: (None,) + tuple(ax)) if ragged else
+                   (lambda ax: (ax[0], None) + tuple(ax[1:])))
+        stash_axes = (type(state_sds["w_stash"])(
+            model.ragged_stage_axes(len(state_sds["w_stash"])))
+            if ragged else
+            (param_axes["stages"] if isinstance(param_axes, dict)
+             else param_axes))
         out["w_stash"] = jax.tree.map(
-            lambda ax, s: by_axes((ax[0], None) + tuple(ax[1:]), s,
-                                  stash_rules),
-            param_axes["stages"] if isinstance(param_axes, dict) else param_axes,
-            state_sds["w_stash"],
+            lambda ax, s: by_axes(ring_ax(ax), s, stash_rules),
+            stash_axes, state_sds["w_stash"],
             is_leaf=lambda x: isinstance(x, tuple) and all(
                 isinstance(a, (str, type(None))) for a in x))
     return out

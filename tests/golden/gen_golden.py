@@ -1,0 +1,101 @@
+"""Generate the golden streaming-runtime trajectories for
+``tests/test_schedule_equivalence.py``.
+
+The fixture was produced by the PRE-refactor stacked ``[S, Lps, ...]``
+runtime (commit 890b850) and pins its exact uniform-plan trajectories:
+per-tick losses plus SHA-256 digests of every final parameter leaf, with
+stage layers flattened to ``[L, ...]`` (a layout both the stacked and
+the ragged runtime reduce to).  Digest equality == bitwise equality, so
+the ragged (per-stage param tree) runtime must reproduce these
+bit-for-bit under a uniform partition — rerunning this script on a
+post-refactor tree only confirms self-consistency, it does not re-derive
+the pre-refactor reference.
+
+Usage:  PYTHONPATH=src python tests/golden/gen_golden.py
+"""
+import hashlib
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from conftest import lm_batch, tiny_cfg  # noqa: E402
+from repro.core import pipeline_stream  # noqa: E402
+from repro.models import Model  # noqa: E402
+
+CASES = [
+    # (mode, pipe, n_layers, lr, ticks)
+    ("spectrain", 2, 4, 0.05, 8),
+    ("vanilla", 2, 4, 0.05, 8),
+    ("pipedream", 2, 4, 0.05, 8),
+    ("spectrain", 3, 6, 0.05, 10),
+    ("spectrain", 4, 4, 0.05, 12),
+]
+
+
+def final_digests(params):
+    """{leaf path: sha256 hexdigest} of final params, stage layers
+    flattened to [L, ...] — a layout both the stacked and the ragged
+    runtime can be reduced to."""
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            params["outer"])[0]:
+        key = "outer/" + "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                                  for p in path)
+        out[key] = hashlib.sha256(np.asarray(leaf).tobytes()).hexdigest()
+    stages = params["stages"]
+    if isinstance(stages, (tuple, list)):   # ragged: concat per-stage trees
+        flat = jax.tree.map(lambda *xs: np.concatenate(
+            [np.asarray(x) for x in xs], 0), *stages)
+    else:                                    # stacked: merge [S, Lps] -> [L]
+        flat = jax.tree.map(
+            lambda a: np.asarray(a).reshape((-1,) + a.shape[2:]), stages)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(flat)[0]:
+        key = "stages/" + "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = hashlib.sha256(np.asarray(leaf).tobytes()).hexdigest()
+    return out
+
+
+def run_case(mode, pipe, n_layers, lr, ticks):
+    cfg = tiny_cfg("granite-8b", n_layers=n_layers, pipe=pipe)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = lm_batch(jax.random.PRNGKey(1), cfg, batch=4, seq=16)
+    sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                       batch)
+    state = pipeline_stream.make_state(m, params, sds, mode=mode)
+    step = jax.jit(pipeline_stream.make_train_step(m, mode=mode, lr=lr))
+    losses, valids = [], []
+    for _ in range(ticks):
+        state, met = step(state, batch)
+        losses.append(float(met["loss"]))
+        valids.append(float(met["loss_valid"]))
+    rec = {"losses": np.asarray(losses, np.float64),
+           "valids": np.asarray(valids, np.float64)}
+    for k, v in final_digests(state["params"]).items():
+        rec["final/" + k] = np.asarray(v)
+    return rec
+
+
+def main():
+    out = {}
+    for mode, pipe, n_layers, lr, ticks in CASES:
+        name = f"{mode}_p{pipe}_L{n_layers}"
+        rec = run_case(mode, pipe, n_layers, lr, ticks)
+        for k, v in rec.items():
+            out[f"{name}/{k}"] = v
+        print(f"{name}: losses={rec['losses'][-3:]}")
+    path = os.path.join(os.path.dirname(__file__),
+                        "stream_uniform_golden.npz")
+    np.savez_compressed(path, **out)
+    print(f"wrote {path} ({os.path.getsize(path)} bytes, {len(out)} keys)")
+
+
+if __name__ == "__main__":
+    main()

@@ -49,10 +49,11 @@ class TestFusedPredict:
         step = jax.jit(pipeline_stream.make_train_step(
             m, mode="spectrain", lr=0.05, fused_predict=True))
         state, _ = step(state, batch)
-        s_fwd = jnp.array([2.0, 0.0])
-        want = st.predict_weights_stacked(
-            state["params"]["stages"], state["momentum"]["stages"],
-            0.05, s_fwd)
+        # stream s_fwd = 2(S-1-k) per ragged stage tree
+        want = tuple(
+            st.predict_weights(w, v, 0.05, s)
+            for w, v, s in zip(state["params"]["stages"],
+                               state["momentum"]["stages"], (2.0, 0.0)))
         for a, b in zip(jax.tree.leaves(state["pred"]["stages"]),
                         jax.tree.leaves(want)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),

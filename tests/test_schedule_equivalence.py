@@ -1,0 +1,331 @@
+"""Schedule-equivalence harness for the ragged streaming runtime.
+
+Three layers of evidence that executing planner partitions did not move
+the numerics:
+
+  * **Golden trajectories** — under uniform plans the ragged per-stage
+    runtime must be *bit-identical* to the pre-refactor stacked
+    ``[S, Lps, ...]`` runtime (fixture recorded at commit 890b850 by
+    ``tests/golden/gen_golden.py``), for every mode and S in {2, 3, 4}.
+  * **Cross-runtime** — a non-uniform DP plan run end-to-end through
+    ``core/pipeline_stream.py`` must track the simulator's loss
+    trajectory for the same plan (XPipe's point: re-verify weight
+    prediction whenever the schedule shape changes).
+  * **Properties** — IR-derived staleness equals the closed forms for
+    ragged partitions, and the runtime's two constant vectors (stash
+    gather offsets 2(S−1−k) vs injection→bwd lag 2(S−1)−k) are never
+    conflated.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import lm_batch, optional_hypothesis, tiny_cfg
+from golden.gen_golden import CASES as GOLDEN_CASES
+from golden.gen_golden import final_digests, run_case
+from repro.core import pipeline_stream
+from repro.core import spectrain as st
+from repro.core.simulator import Simulator, make_mlp_staged, staged_from_model
+from repro.models import Model
+from repro.planner import Partition, plan, synthetic_profile, uniform
+from repro.planner.partition import dp_split
+
+given, settings, hyp_st = optional_hypothesis()
+
+GOLDEN = "golden/stream_uniform_golden.npz"
+
+
+def _golden():
+    import os
+    return np.load(os.path.join(os.path.dirname(__file__), GOLDEN))
+
+
+# ===========================================================================
+# golden: uniform-plan ragged runtime == pre-refactor stacked runtime
+# ===========================================================================
+
+
+class TestGoldenUniform:
+    @pytest.mark.parametrize("case", GOLDEN_CASES,
+                             ids=[f"{m}_p{p}_L{n}"
+                                  for m, p, n, _, _ in GOLDEN_CASES])
+    def test_bit_identical_to_stacked_runtime(self, case):
+        """Acceptance criterion: per-tick losses and every final param
+        leaf (stage layers flattened to [L, ...]) match the recorded
+        stacked-runtime trajectory bit-for-bit."""
+        mode, pipe, n_layers, lr, ticks = case
+        name = f"{mode}_p{pipe}_L{n_layers}"
+        gold = _golden()
+        rec = run_case(mode, pipe, n_layers, lr, ticks)
+        np.testing.assert_array_equal(gold[f"{name}/losses"], rec["losses"])
+        np.testing.assert_array_equal(gold[f"{name}/valids"], rec["valids"])
+        for key in gold.files:
+            if key.startswith(f"{name}/final/"):
+                want = str(gold[key])
+                got = str(rec[key.split("/", 1)[1]])
+                assert got == want, f"param leaf diverged: {key}"
+
+    def test_explicit_uniform_plan_matches_golden(self):
+        """A plan() object with the uniform partition goes through the
+        same validation/regrouping path and must also hit the golden
+        trajectory exactly."""
+        cfg = tiny_cfg("granite-8b", n_layers=4, pipe=2)
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = lm_batch(jax.random.PRNGKey(1), cfg, batch=4, seq=16)
+        sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+        p = plan(cfg, n_stages=2, schedule="stream", partitioner="uniform")
+        assert p.partition.sizes() == (2, 2)
+        state = pipeline_stream.make_state(m, params, sds, plan=p)
+        step = jax.jit(pipeline_stream.make_train_step(
+            m, mode="spectrain", lr=0.05, plan=p))
+        losses = []
+        for _ in range(8):
+            state, met = step(state, batch)
+            losses.append(float(met["loss"]))
+        gold = _golden()
+        np.testing.assert_array_equal(gold["spectrain_p2_L4/losses"],
+                                      np.asarray(losses, np.float64))
+        for key, want in final_digests(state["params"]).items():
+            assert str(gold[f"spectrain_p2_L4/final/{key}"]) == want, key
+
+
+# ===========================================================================
+# DP (non-uniform) plans execute and track the simulator
+# ===========================================================================
+
+# per-layer cost skew whose DP split is provably non-uniform
+_DP_CASES = {
+    2: (4, [9.0, 1.0, 1.0, 1.0]),
+    3: (6, [9.0, 1.0, 1.0, 1.0, 1.0, 9.0]),
+    4: (8, [9.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 9.0]),
+}
+
+
+def _dp_plan(S):
+    L, costs = _DP_CASES[S]
+    p = plan(profile=synthetic_profile(costs), n_stages=S,
+             schedule="stream", partitioner="dp")
+    assert p.partition.sizes() != uniform(L, S).sizes(), \
+        "test profile must force a non-uniform split"
+    return p
+
+
+class TestDPPlanExecution:
+    @pytest.mark.parametrize("S", sorted(_DP_CASES))
+    def test_dp_plan_runs_and_tracks_simulator(self, S):
+        """Acceptance criterion: a non-uniform plan() partition executes
+        end-to-end in the streaming runtime, and its loss trajectory
+        lands where the simulator's (same plan, same ragged stages, same
+        data) does."""
+        L, _ = _DP_CASES[S]
+        p = _dp_plan(S)
+        cfg = tiny_cfg("granite-8b", n_layers=L, pipe=S)
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = lm_batch(jax.random.PRNGKey(1), cfg, batch=4, seq=16)
+        sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+
+        state = pipeline_stream.make_state(m, params, sds, plan=p)
+        # ragged stage trees realize the plan's layer counts
+        got_sizes = tuple(
+            jax.tree.leaves(t["layers"])[0].shape[0]
+            for t in state["params"]["stages"])
+        assert got_sizes == p.partition.sizes()
+        step = jax.jit(pipeline_stream.make_train_step(
+            m, mode="spectrain", lr=0.05, plan=p))
+        stream_losses = []
+        ticks = 30 + 2 * S
+        for _ in range(ticks):
+            state, met = step(state, batch)
+            if float(met["loss_valid"]):
+                stream_losses.append(float(met["loss"]))
+
+        fns, repack = staged_from_model(m, p.partition)
+        sim = Simulator(fns, repack(params), plan=p, scheme="spectrain",
+                        lr=0.05)
+        sim_losses = [sim.step(batch)["loss"] for _ in range(ticks)]
+
+        assert np.isfinite(stream_losses).all()
+        assert np.isfinite(sim_losses).all()
+        # both overfit the fixed batch; their converged levels must agree
+        s_end = float(np.mean(stream_losses[-5:]))
+        r_end = float(np.mean(sim_losses[-5:]))
+        assert stream_losses[-1] < stream_losses[0]
+        assert abs(s_end - r_end) < 0.75, (S, s_end, r_end)
+
+    def test_dp_beats_uniform_bottleneck_in_plan(self):
+        """The reason to execute DP plans at all: lower modelled
+        bottleneck, now reported as realized per-stage costs."""
+        p = _dp_plan(4)
+        assert p.bottleneck_s < p.uniform_bottleneck_s
+        assert len(p.stage_costs_s) == 4
+        assert max(p.stage_costs_s) == pytest.approx(p.bottleneck_s)
+        assert p.stage_ranges == p.partition.stages()
+
+
+class TestPlanValidation:
+    """Plans are executable artifacts — bad layer ranges must fail at
+    state construction, not corrupt slicing later."""
+
+    def _mk(self, n_layers=4, pipe=2):
+        cfg = tiny_cfg("granite-8b", n_layers=n_layers, pipe=pipe)
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            lm_batch(jax.random.PRNGKey(1), cfg, batch=4, seq=16))
+        return m, params, sds
+
+    def test_wrong_layer_count_rejected(self):
+        m, params, sds = self._mk(n_layers=4)
+        p = plan(profile=synthetic_profile([1.0] * 6), n_stages=2,
+                 schedule="stream")
+        with pytest.raises(ValueError, match="layers"):
+            pipeline_stream.make_state(m, params, sds, plan=p)
+        with pytest.raises(ValueError, match="layers"):
+            pipeline_stream.make_train_step(m, mode="spectrain", lr=0.05,
+                                            plan=p)
+
+    def test_wrong_stage_count_rejected(self):
+        m, params, sds = self._mk(n_layers=4, pipe=2)
+        p = plan(profile=synthetic_profile([1.0] * 4), n_stages=4,
+                 schedule="stream")
+        with pytest.raises(ValueError, match="stages"):
+            pipeline_stream.make_state(m, params, sds, plan=p)
+
+    def test_partition_params_validates(self):
+        m, params, _ = self._mk(n_layers=4)
+        with pytest.raises(ValueError, match="cover"):
+            m.partition_stage_params(params["stages"], (1, 2))
+        with pytest.raises(ValueError, match="stage"):
+            m.partition_stage_params(params["stages"], (1, 1, 2))
+
+    def test_ragged_roundtrip_uniform(self):
+        m, params, _ = self._mk(n_layers=4)
+        ragged = m.partition_stage_params(params["stages"], (2, 2))
+        back = m.stack_stage_params(ragged)
+        for a, b in zip(jax.tree.leaves(back),
+                        jax.tree.leaves(params["stages"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        with pytest.raises(ValueError, match="ragged"):
+            m.stack_stage_params(
+                m.partition_stage_params(params["stages"], (1, 3)))
+
+    def test_simulator_rejects_stage_mismatch(self):
+        p = plan(n_layers=4, n_stages=4, schedule="stream")
+        fns, params = make_mlp_staged(
+            jax.random.PRNGKey(0), in_dim=8, width=16, depth=4,
+            n_classes=4, n_stages=2)
+        with pytest.raises(ValueError, match="stage"):
+            Simulator(fns, params, plan=p, scheme="spectrain")
+
+
+# ===========================================================================
+# ragged MLP stages in the simulator
+# ===========================================================================
+
+
+def _data_iter(seed, batch=16, in_dim=8, classes=4):
+    k = jax.random.PRNGKey(seed)
+    wtrue = jax.random.normal(jax.random.PRNGKey(99), (in_dim, classes))
+    while True:
+        k, k1 = jax.random.split(k)
+        x = jax.random.normal(k1, (batch, in_dim))
+        yield {"x": x, "y": jnp.argmax(x @ wtrue, -1)}
+
+
+class TestRaggedSimulator:
+    def test_ragged_mlp_converges_under_stream_plan(self):
+        p = plan(profile=synthetic_profile([9.0, 1.0, 1.0, 1.0]),
+                 n_stages=2, schedule="stream", partitioner="dp")
+        fns, params = make_mlp_staged(
+            jax.random.PRNGKey(0), in_dim=8, width=16, depth=4,
+            n_classes=4, n_stages=2, sizes=p.partition.sizes())
+        sim = Simulator(fns, params, plan=p, scheme="spectrain", lr=0.05)
+        it = _data_iter(0)
+        losses = [sim.step(next(it))["loss"] for _ in range(60)]
+        assert np.isfinite(losses).all()
+        assert np.mean(losses[-10:]) < np.mean(losses[:10])
+
+    def test_uniform_sizes_match_default_split(self):
+        fns, pa = make_mlp_staged(jax.random.PRNGKey(0), in_dim=8,
+                                  width=16, depth=4, n_classes=4,
+                                  n_stages=2)
+        fns2, pb = make_mlp_staged(jax.random.PRNGKey(0), in_dim=8,
+                                   width=16, depth=4, n_classes=4,
+                                   n_stages=2, sizes=(2, 2))
+        for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_bad_sizes_rejected(self):
+        with pytest.raises(ValueError):
+            make_mlp_staged(jax.random.PRNGKey(0), in_dim=8, width=16,
+                            depth=4, n_classes=4, n_stages=2, sizes=(1, 2))
+
+
+# ===========================================================================
+# properties: staleness closed forms and the two constant vectors
+# ===========================================================================
+
+
+@settings(max_examples=25, deadline=None)
+@given(S=hyp_st.integers(2, 6), seed=hyp_st.integers(0, 999))
+def test_ragged_plan_staleness_matches_closed_forms(S, seed):
+    """IR-derived s_fwd/s_bwd are schedule-shape facts: they must equal
+    the core/spectrain.py closed forms for *any* partition, however
+    skewed — staleness depends on S, never on where the cuts fall."""
+    rng = np.random.default_rng(seed)
+    L = int(rng.integers(S, 4 * S + 1))
+    costs = rng.uniform(0.5, 10.0, L).tolist()
+    p = plan(profile=synthetic_profile(costs), n_stages=S,
+             schedule="stream", partitioner="dp")
+    for k in range(S):
+        assert p.s_fwd[k] == st.version_difference_stream(k, S, "forward")
+        assert p.s_bwd[k] == st.version_difference_stream(k, S, "backward")
+
+
+@settings(max_examples=25, deadline=None)
+@given(S=hyp_st.integers(2, 6), seed=hyp_st.integers(0, 999))
+def test_stash_offsets_never_conflate_constant_vectors(S, seed):
+    """fb_gap (stash gather offsets, 2(S−1−k)) and bwd_lag
+    (injection→bwd ticks, 2(S−1)−k) differ by exactly k; swapping them
+    at any stage k ≥ 1 would corrupt the stash gather."""
+    rng = np.random.default_rng(seed)
+    L = int(rng.integers(S, 4 * S + 1))
+    p = plan(profile=synthetic_profile(rng.uniform(0.5, 10.0, L).tolist()),
+             n_stages=S, schedule="stream", partitioner="dp")
+    for k in range(S):
+        assert p.fb_gap[k] == 2 * (S - 1 - k)
+        assert p.bwd_lag[k] == 2 * (S - 1) - k
+        assert p.bwd_lag[k] - p.fb_gap[k] == k
+        if k >= 1:
+            assert p.fb_gap[k] != p.bwd_lag[k]
+    # the forward prediction distance is the stash gap, not the lag
+    assert tuple(p.s_fwd) == tuple(p.fb_gap)
+
+
+@settings(max_examples=25, deadline=None)
+@given(S=hyp_st.integers(2, 6), seed=hyp_st.integers(0, 999))
+def test_dp_partition_is_valid_and_no_worse_than_uniform(S, seed):
+    rng = np.random.default_rng(seed)
+    L = int(rng.integers(S, 4 * S + 1))
+    costs = rng.uniform(0.5, 10.0, L).tolist()
+    cuts = rng.uniform(0.0, 1.0, L).tolist()
+    part = dp_split(costs, cuts, S)
+    sizes = part.sizes()
+    assert sum(sizes) == L and min(sizes) >= 1 and len(sizes) == S
+    from repro.planner.partition import bottleneck
+    assert bottleneck(costs, cuts, part) <= \
+        bottleneck(costs, cuts, uniform(L, S)) + 1e-12
+
+
+def test_partition_stage_of_covers_all_layers():
+    part = Partition((0, 1, 4, 6))
+    assert [part.stage_of(j) for j in range(6)] == [0, 1, 1, 1, 2, 2]
+    with pytest.raises(ValueError):
+        part.stage_of(6)
