@@ -1,0 +1,108 @@
+"""Render the planner IR's schedule families as markdown.
+
+Generates the timeline diagrams and the bubble-vs-memory table used by
+``docs/SCHEDULES.md`` and EXPERIMENTS.md straight from the IR, so the
+docs describe what the emitters actually emit:
+
+    PYTHONPATH=src python examples/render_schedules.py            # diagrams
+    PYTHONPATH=src python examples/render_schedules.py --table    # table only
+
+Everything printed is derived: timelines from the event list, staleness
+from update counting, bubble fraction / stash depths from the same
+timeline the runtimes execute.
+"""
+import argparse
+import sys
+
+from repro.planner import schedule_ir as ir
+
+# (title, builder, notes) — small instances so diagrams stay readable
+DIAGRAMS = [
+    ("GPipe (S=2, M=4, one round)",
+     lambda: ir.gpipe(2, n_microbatches=4, n_rounds=1),
+     "all forwards, all backwards, one accumulated update (u)"),
+    ("1F1B / PipeDream-flush (S=2, M=4, one round)",
+     lambda: ir.one_f_one_b(2, 4, n_rounds=1),
+     "warm-up forwards, then fwd/bwd alternation; same bubble as GPipe, "
+     "stage k stashes only S-k activations"),
+    ("PipeDream-2BW (S=2, m=2, continuous)",
+     lambda: ir.pipedream_2bw(2, n_microbatches=2, n_groups=3),
+     "no flush: per-stage update every m microbatches, reads pinned one "
+     "version back (double buffer)"),
+    ("Interleaved 1F1B (S=2 devices, v=2 chunks, M=4, one round)",
+     lambda: ir.interleaved_1f1b(2, 4, v=2, n_rounds=1),
+     "cell f3.1 = forward of microbatch 3 on the device's chunk 1; the "
+     "fill/drain ramp shrinks ~v x relative to the round's work"),
+    ("Streaming tick schedule (S=2, steady state)",
+     lambda: ir.streaming(2, n_ticks=8),
+     "one 1F+1B wave and a per-stage update every tick - zero bubble "
+     "after warm-up, paid for with staleness 2(S-1-k)"),
+]
+
+TABLE_CASES = [
+    ("gpipe", lambda S, M: ir.gpipe(S, n_microbatches=M, n_rounds=2)),
+    ("1f1b", lambda S, M: ir.one_f_one_b(S, M)),
+    ("2bw", lambda S, M: ir.pipedream_2bw(S, n_microbatches=M)),
+    ("interleaved v=2",
+     lambda S, M: ir.interleaved_1f1b(S, M, v=2)),
+]
+
+
+def diagrams(out=sys.stdout):
+    for title, build, note in DIAGRAMS:
+        sched = build()
+        sched.validate()
+        out.write(f"### {title}\n\n{note}\n\n```\n")
+        out.write(sched.render(max_ticks=22))
+        # diagrams use deliberately short timelines; report the most
+        # warmed-up minibatch they contain
+        mb = sched.complete_minibatches()[-1]
+        out.write(f"\n```\n\ns_fwd={sched.staleness_vector('forward', mb)}"
+                  f"  s_bwd={sched.staleness_vector('backward', mb)}"
+                  f"  bubble={sched.bubble_fraction():.3f}\n\n")
+
+
+def table(S=4, M=8, out=sys.stdout):
+    out.write(f"S={S} stages, M={M} microbatches per round/group "
+              f"(all values derived from the IR timeline):\n\n")
+    out.write("| schedule | bubble fraction | peak act stash "
+              "(stage 0 / total) | weight versions | staleness "
+              "s_fwd |\n")
+    out.write("|---|---|---|---|---|\n")
+    for name, build in TABLE_CASES:
+        sched = build(S, M)
+        sched.validate()
+        C = sched.n_stages
+        stash = [sched.peak_activation_stash(q) for q in range(C)]
+        wdep = max(sched.weight_stash_depth(q) for q in range(C))
+        mb = sched.steady_minibatch()
+        s_fwd = sched.staleness_vector("forward", mb)
+        s_desc = ("0 (sync)" if not any(s_fwd)
+                  else "1 (uniform)" if set(s_fwd) == {1}
+                  else str(s_fwd))
+        out.write(f"| {name} | {sched.bubble_fraction():.3f} | "
+                  f"{stash[0]} / {sum(stash)} | {wdep} | {s_desc} |\n")
+    stream = ir.streaming(S)
+    mb = stream.steady_minibatch()
+    out.write(f"| stream | ~0 past warm-up | "
+              f"{stream.peak_activation_stash(0)} / "
+              f"{sum(stream.peak_activation_stash(q) for q in range(S))} | "
+              f"1 (+ring in pipedream mode) | "
+              f"{stream.staleness_vector('forward', mb)} |\n")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table", action="store_true",
+                    help="only the bubble-vs-memory comparison table")
+    ap.add_argument("--stages", type=int, default=4)
+    ap.add_argument("--microbatches", type=int, default=8)
+    args = ap.parse_args(argv)
+    if not args.table:
+        diagrams()
+    table(args.stages, args.microbatches)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -34,6 +34,23 @@ ragged.  A planner ``PipelinePlan`` with a non-uniform (DP) partition is
 therefore *executed*, not just logged: ``make_state`` regroups the
 canonical stacked init layout via ``Model.partition_stage_params`` and
 validates the plan's layer ranges against the model.
+
+Besides the streaming tick loop above, this module hosts an
+**IR-interpreter runtime** (``make_ir_state`` / ``make_ir_train_step``)
+executing the planner's round-based schedule families — GPipe, 1F1B
+(PipeDream-flush), PipeDream-2BW, and interleaved/virtual-stage 1F1B.
+One ``train_step`` call is one flush round (or 2BW accumulation group):
+the step walks the IR's compute events in timeline order instead of a
+hard-coded fill/steady/drain structure, so the control flow is the
+schedule.  Per-event weight reads resolve through the IR — flush
+schedules read current weights (their derived staleness is 0), 2BW
+reads the previous version from a weight stash whose depth comes from
+``Schedule.weight_stash_depth`` (2, the "double buffer"), and
+``spectrain`` mode predicts each read forward by that event's derived
+version lag (Eq. 4 with s from the IR, not a closed form).  Virtual
+stages make ``params["stages"]`` a tuple of ``n_chunks = S·v`` chunk
+trees; device d of the S devices hosts chunks ``d, d+S, …``
+(``Model.device_chunk_params``).
 """
 from __future__ import annotations
 
@@ -391,3 +408,248 @@ def make_train_step(model, *, mode: str = "spectrain", lr: float,
                        "loss_valid": n}
 
     return train_step
+
+
+# ===========================================================================
+# IR-interpreter runtime: round-based schedules (gpipe / 1f1b / 2bw /
+# interleaved) executed by walking the planner IR's event timeline
+# ===========================================================================
+
+# one source of truth lives next to the emitters (schedule_ir has no
+# repro.core imports, so this does not cycle)
+from repro.planner.schedule_ir import ROUND_SCHEDULES as IR_SCHEDULES  # noqa: E402,E501
+
+
+def _ir_plan_check(model, plan) -> Tuple[int, ...]:
+    """Validate a plan as an executable artifact for the IR interpreter;
+    returns the per-chunk layer counts."""
+    if plan is None:
+        raise ValueError("the IR-interpreter runtime needs a plan "
+                         "(repro.planner.plan(..., schedule='1f1b'|...))")
+    if plan.schedule not in IR_SCHEDULES:
+        raise ValueError(
+            f"IR interpreter executes {IR_SCHEDULES}, got a "
+            f"{plan.schedule!r} plan (the stream schedule runs through "
+            f"make_train_step)")
+    if plan.n_stages != model.n_stages:
+        raise ValueError(f"plan has {plan.n_stages} device stages, model "
+                         f"has {model.n_stages}")
+    part = plan.partition
+    if part.n_layers != model.cfg.n_layers:
+        raise ValueError(f"plan partitions {part.n_layers} layers, model "
+                         f"has {model.cfg.n_layers}")
+    sizes = part.sizes()
+    if len(sizes) != plan.n_chunks:
+        raise ValueError(f"plan has {len(sizes)} chunk-stages, expected "
+                         f"{plan.n_chunks} (= {plan.n_stages} stages × "
+                         f"{plan.virtual_stages} virtual)")
+    if min(sizes) < 1:
+        raise ValueError(f"plan has an empty chunk-stage: sizes={sizes}")
+    if plan.round_microbatches < 1:
+        raise ValueError(f"plan carries no round size "
+                         f"(round_microbatches={plan.round_microbatches})")
+    depth = max(plan.w_stash_depth) if plan.w_stash_depth else 1
+    if depth > 2:
+        raise NotImplementedError(
+            f"IR-derived weight-stash depth {depth} > 2: only "
+            f"single-buffer and 2BW double-buffer reads are implemented")
+    return sizes
+
+
+def _round_program(plan):
+    """One canonical round of compute events, in timeline order.
+
+    Each entry is ``(kind, local_mb, chunk_stage, s)`` with ``s`` the
+    IR-derived version lag of that event's weight read (the per-(stage,
+    microbatch) SpecTrain prediction distance).  Flush schedules use
+    round 0; 2BW uses a steady accumulation group (every group executes
+    identically under the double-buffer rotation)."""
+    from repro.planner import schedule_ir as sir
+    sched = plan.ir
+    if sched is None:
+        kw = {}
+        if plan.schedule == "interleaved":
+            kw["v"] = plan.virtual_stages
+        if plan.round_microbatches:
+            kw["n_microbatches"] = plan.round_microbatches
+        sched = sir.emit(plan.schedule, plan.n_stages, **kw)
+    M = plan.round_microbatches
+    base = M if plan.schedule == "2bw" else 0
+    prog = []
+    for e in sched.events:
+        if e.kind == sir.UPDATE or not base <= e.mb < base + M:
+            continue
+        phase = "forward" if e.kind == sir.FWD else "backward"
+        prog.append((e.kind, e.mb - base, e.stage,
+                     sched.staleness(e.stage, phase, e.mb)))
+    n_compute = 2 * M * plan.n_chunks
+    if len(prog) != n_compute:
+        raise ValueError(f"round program has {len(prog)} events, expected "
+                         f"{n_compute}")
+    return prog
+
+
+def make_ir_state(model, params, batch_sds, *, plan,
+                  mode: str = "spectrain") -> Dict[str, Any]:
+    """Train state for the IR interpreter: chunked params + momentum
+    (+ the 2BW double buffer when the IR derives a stash depth of 2).
+
+    ``params`` is the canonical stacked init layout; its stage weights
+    are regrouped into ``plan.n_chunks`` ragged chunk trees by the
+    plan's partition (virtual stages give a device several chunk trees —
+    ``Model.device_chunk_params`` recovers the per-device grouping).
+    Unlike the streaming runtime there are no activation rings: the
+    interpreter's in-flight activations live inside one traced round,
+    sized by the schedule itself (peak = ``plan.act_stash``).
+    """
+    assert mode in MODES, mode
+    del batch_sds  # interpreter state holds no rings; shape-agnostic
+    sizes = _ir_plan_check(model, plan)
+    chunks = model.partition_stage_params(params["stages"], sizes,
+                                          n_chunks=plan.n_chunks)
+    params = {"outer": params["outer"], "stages": chunks}
+    state: Dict[str, Any] = {
+        "params": params,
+        "momentum": sgd.init(params).v,
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if max(plan.w_stash_depth) > 1:
+        # 2BW: reads are pinned one version back; stash starts equal to
+        # params (version 0 reads version 0 — the IR's warm-up truncation)
+        state["stash"] = {
+            "params": jax.tree.map(jnp.array, params),
+            "momentum": jax.tree.map(jnp.array, state["momentum"]),
+        }
+    return state
+
+
+def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
+                       gamma: float = 0.9,
+                       clip: Optional[float] = None) -> Callable:
+    """Schedule-driven step: one call executes one flush round (gpipe /
+    1f1b / interleaved) or one 2BW accumulation group of
+    ``plan.round_microbatches`` microbatches, by interpreting the IR's
+    compute events in timeline order.
+
+    Weight reads per event:
+
+      flush schedules   current weights — no update lands inside a round,
+                        so every mode coincides (IR staleness 0)
+      2bw               the stashed previous version (the double buffer);
+                        ``spectrain`` predicts it forward by the event's
+                        IR-derived lag (s = 1): Ŵ = W_prev − s·η·v_prev
+
+    The gradient is the mean over the round's microbatches; the update
+    applies once per round to current params (2BW then rotates the
+    double buffer).
+    """
+    assert mode in MODES, mode
+    sizes = _ir_plan_check(model, plan)
+    del sizes
+    prog = _round_program(plan)
+    C = plan.n_chunks
+    M = plan.round_microbatches
+    two_buf = max(plan.w_stash_depth) > 1
+
+    def stage_fn(sp, xk):
+        xk, aux = model.stage_apply(sp, (xk, jnp.zeros((), jnp.float32)))
+        return xk, aux
+
+    def step(state: Dict[str, Any], batch):
+        B = jax.tree.leaves(batch)[0].shape[0]
+        assert B % M == 0, (
+            f"batch {B} not divisible by the plan's round size {M}")
+        mbs = jax.tree.map(
+            lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]), batch)
+        mb = lambda m: jax.tree.map(lambda x: x[m], mbs)
+
+        params, mom = state["params"], state["momentum"]
+        if two_buf:
+            base_p, base_m = state["stash"]["params"], \
+                state["stash"]["momentum"]
+        else:
+            base_p, base_m = params, mom
+
+        # per-(chunk, lag) read-weight cache: the IR drives prediction —
+        # flush events carry s = 0 (no-op), 2BW events s = 1
+        cache: Dict[Tuple[str, int], Any] = {}
+
+        def chunk_w(q, s):
+            key = ("c%d" % q, s)
+            if key not in cache:
+                w = base_p["stages"][q]
+                if mode == "spectrain" and s > 0:
+                    w = st.predict_weights(w, base_m["stages"][q], lr,
+                                           float(s))
+                cache[key] = w
+            return cache[key]
+
+        def outer_w(s):
+            key = ("outer", s)
+            if key not in cache:
+                w = base_p["outer"]
+                if mode == "spectrain" and s > 0:
+                    w = st.predict_weights(w, base_m["outer"], lr, float(s))
+                cache[key] = w
+            return cache[key]
+
+        acts: Dict[Tuple[int, int], Any] = {}   # (m, q) -> chunk input
+        outs: Dict[Tuple[int, int], Any] = {}   # (m, q) -> chunk output
+        cots: Dict[Tuple[int, int], Any] = {}   # (m, q) -> output cotangent
+        g_chunks = [None] * C
+        g_outer = None
+        losses = []
+
+        def acc(a, g):
+            return g if a is None else jax.tree.map(jnp.add, a, g)
+
+        for kind, m, q, s in prog:
+            if kind == "fwd":
+                x = model.embed(outer_w(s), mb(m)) if q == 0 \
+                    else outs.pop((m, q - 1))
+                acts[(m, q)] = x
+                out, _aux = stage_fn(chunk_w(q, s), x)
+                outs[(m, q)] = out
+            else:
+                if q == C - 1:
+                    tgt = mb(m)["targets"]
+                    loss_m, head_vjp = jax.vjp(
+                        lambda o, xl: model.head_loss(o, xl, tgt),
+                        outer_w(s), outs.pop((m, q)))
+                    go_head, cot = head_vjp(jnp.ones((), loss_m.dtype))
+                    g_outer = acc(g_outer, go_head)
+                    losses.append(loss_m)
+                else:
+                    cot = cots.pop((m, q + 1))
+                _, vjp_q = jax.vjp(stage_fn, chunk_w(q, s), acts.pop((m, q)))
+                gw, gx = vjp_q((cot, jnp.ones((), jnp.float32)))
+                g_chunks[q] = acc(g_chunks[q], gw)
+                if q == 0:
+                    _, evjp = jax.vjp(lambda o: model.embed(o, mb(m)),
+                                      outer_w(s))
+                    (go_embed,) = evjp(gx)
+                    g_outer = acc(g_outer, go_embed)
+                else:
+                    cots[(m, q)] = gx
+        assert not acts and not outs and not cots, (
+            "IR round program left in-flight tensors: "
+            f"{sorted(acts) + sorted(outs) + sorted(cots)}")
+
+        grads = {"outer": g_outer, "stages": tuple(g_chunks)}
+        grads = jax.tree.map(lambda g: g / M, grads)
+        if clip:
+            grads, _ = sgd.clip_by_global_norm(grads, clip)
+        new_params, new_mom = sgd.update(
+            params, sgd.MomentumState(mom), grads, lr=lr, gamma=gamma)
+        new_state = {
+            **state,
+            "params": new_params, "momentum": new_mom.v,
+            "step": state["step"] + 1,
+        }
+        if two_buf:
+            new_state["stash"] = {"params": params, "momentum": mom}
+        loss = sum(losses) / len(losses)
+        return new_state, {"loss": loss,
+                           "loss_valid": jnp.ones((), jnp.float32)}
+
+    return step

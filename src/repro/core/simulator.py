@@ -57,13 +57,17 @@ class Simulator:
         IR-derived per-stage (s_fwd, s_bwd) replace the hardcoded
         round-robin closed forms, so any emitted schedule's staleness
         structure can be simulated.  Without a plan the paper's
-        round-robin Eqs. (5)/(6) are used, as before."""
+        round-robin Eqs. (5)/(6) are used, as before.  Interleaved
+        plans simulate at chunk-stage granularity (``plan.n_chunks``
+        stages — the device folding changes the timeline, never the
+        per-chunk staleness numerics)."""
         assert scheme in self.SCHEMES, scheme
         if plan is not None:
-            if n_stages and n_stages != plan.n_stages:
+            n_chunks = getattr(plan, "n_chunks", plan.n_stages)
+            if n_stages and n_stages != n_chunks:
                 raise ValueError(f"n_stages={n_stages} contradicts "
-                                 f"plan.n_stages={plan.n_stages}")
-            n_stages = plan.n_stages
+                                 f"plan's {n_chunks} chunk-stages")
+            n_stages = n_chunks
             self.s_fwd = tuple(plan.s_fwd)
             self.s_bwd = tuple(plan.s_bwd)
             # ragged-stage accounting: the per-stage staleness vectors
@@ -71,10 +75,10 @@ class Simulator:
             # whose partition disagrees with the params' stage count
             # would silently pair stage k's weights with stage j's s.
             got = len(params["stages"])
-            if got != plan.n_stages:
+            if got != n_chunks:
                 raise ValueError(
                     f"params have {got} stage trees but plan has "
-                    f"{plan.n_stages} stages")
+                    f"{n_chunks} (chunk-)stages")
         else:
             if not n_stages:
                 raise ValueError("need n_stages or a plan")
@@ -282,7 +286,9 @@ def staged_from_model(model, partition=None
     simulator param layout.  ``partition``: an optional planner
     ``Partition`` — repack then builds ragged per-stage trees from its
     layer ranges (``stage_apply`` reads each stage's layer count off the
-    tree), so non-uniform DP splits simulate as they execute.
+    tree), so non-uniform DP splits simulate as they execute.  A
+    partition with ``n_stages · v`` chunk-stages (interleaved plans)
+    yields that many chunk trees — the simulator runs them as stages.
     """
     if partition is not None and partition.n_layers != model.cfg.n_layers:
         raise ValueError(f"partition covers {partition.n_layers} layers, "
@@ -293,8 +299,8 @@ def staged_from_model(model, partition=None
     def repack(params):
         return {
             "outer": {"in": params["outer"], "out": params["outer"]},
-            "stages": list(model.partition_stage_params(params["stages"],
-                                                        sizes)),
+            "stages": list(model.partition_stage_params(
+                params["stages"], sizes, n_chunks=len(sizes))),
         }
 
     def embed(outer_in, batch):

@@ -14,6 +14,11 @@ differences, derived the same way (s = #updates between the weight read and
 the minibatch's own update landing):
 
        s_fwd = 2·(N − 1 − k),   s_bwd = 0
+
+The 1F1B schedule family added by the planner IR has closed forms too:
+
+  1f1b / interleaved (flush)   s_fwd = s_bwd = 0    (synchronous rounds)
+  2bw (PipeDream-2BW)          s_fwd = s_bwd = 1    (double-buffered, m ≥ N)
 """
 from __future__ import annotations
 
@@ -49,6 +54,33 @@ def version_difference_stream(stage: int, n_stages: int, phase: str) -> int:
     if phase == "backward":
         return 0
     raise ValueError(phase)
+
+
+def version_difference_1f1b(stage: int, n_stages: int, phase: str) -> int:
+    """1F1B with flush (PipeDream-flush) and its interleaved variant:
+    gradients accumulate across the round and apply in one per-stage
+    update after the drain, so no update can land between any weight
+    read and the minibatch's own gradient apply — staleness-free like
+    GPipe, for every (chunk-)stage and phase."""
+    k, n = stage, n_stages
+    if not 0 <= k < n:
+        raise ValueError(f"stage {k} out of range for {n} stages")
+    if phase not in ("forward", "backward"):
+        raise ValueError(phase)
+    return 0
+
+
+def version_difference_2bw(stage: int, n_stages: int, phase: str) -> int:
+    """PipeDream-2BW: group g's forward *and* backward are pinned to the
+    weight version with g−1 updates applied (double buffering), and its
+    own update is the g-th — a uniform, stage-independent staleness of 1
+    for both phases (the 2BW paper's delay term)."""
+    k, n = stage, n_stages
+    if not 0 <= k < n:
+        raise ValueError(f"stage {k} out of range for {n} stages")
+    if phase not in ("forward", "backward"):
+        raise ValueError(phase)
+    return 1
 
 
 # ---------------------------------------------------------------------------

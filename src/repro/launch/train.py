@@ -9,6 +9,11 @@ injection, and exact-resume determinism.
 Example (the 8-deliverable end-to-end run):
     PYTHONPATH=src python -m repro.launch.train --arch granite-8b --smoke \
         --pipe 2 --layers 4 --steps 100 --lr 2e-2 --mode spectrain
+
+``--schedule {stream,gpipe,1f1b,2bw,interleaved}`` selects the pipeline
+schedule (round schedules run through the IR interpreter, one flush
+round / 2BW group per step); ``--virtual-stages v`` gives each device v
+chunk-stages under ``--schedule interleaved``.  See docs/SCHEDULES.md.
 """
 from __future__ import annotations
 
@@ -71,6 +76,15 @@ def main(argv=None) -> int:
     ap.add_argument("--clip", type=float, default=0.0)
     ap.add_argument("--mode", default="spectrain",
                     choices=("sync",) + pipeline_stream.MODES)
+    ap.add_argument("--schedule", default="stream",
+                    choices=("stream",) + pipeline_stream.IR_SCHEDULES,
+                    help="pipeline schedule: the streaming tick runtime "
+                         "(default) or an IR-interpreted round schedule "
+                         "(gpipe / 1f1b / 2bw / interleaved)")
+    ap.add_argument("--virtual-stages", type=int, default=1,
+                    dest="virtual_stages",
+                    help="chunks per device for --schedule interleaved "
+                         "(v >= 2 shrinks the flush bubble ~v x)")
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
@@ -99,15 +113,52 @@ def main(argv=None) -> int:
 
     # profile-guided plan: partition + IR-derived staleness for the
     # schedule this run executes (gpipe for the sync fill/drain pipeline,
-    # the streaming tick schedule otherwise).  The partition is executed:
-    # pipeline_stream regroups stage weights into ragged per-stage trees
-    # by its layer ranges, so --partitioner dp changes which layers each
-    # stage runs, not just the printed bottleneck.
+    # --schedule otherwise).  The partition is executed: the runtimes
+    # regroup stage weights into ragged per-(chunk-)stage trees by its
+    # layer ranges, so --partitioner dp changes which layers each stage
+    # runs, not just the printed bottleneck.
+    if args.mode == "sync" and args.schedule != "stream":
+        raise SystemExit(
+            f"--mode sync runs the fill/drain pipeline and cannot honor "
+            f"--schedule {args.schedule}; drop one of the two flags")
+    if args.virtual_stages > 1 and args.schedule != "interleaved":
+        raise SystemExit(
+            f"--virtual-stages {args.virtual_stages} requires "
+            f"--schedule interleaved, got --schedule {args.schedule}")
+    schedule = "gpipe" if args.mode == "sync" else args.schedule
+    plan_kw = {}
+    if schedule in pipeline_stream.IR_SCHEDULES and args.mode != "sync":
+        # round size: --ticks when given, else the largest batch divisor
+        # compatible with the schedule (interleaved groups microbatches
+        # by S, 2bw needs m >= S for its two weight buffers); the
+        # interpreter splits the global batch into the round's
+        # microbatches, so M must divide the batch
+        S, v = args.pipe, args.virtual_stages
+
+        def legal(M):
+            if args.batch % M:
+                return False
+            if schedule == "interleaved":
+                return M % S == 0
+            if schedule == "2bw":
+                return M >= S
+            return True
+
+        M = args.ticks if args.ticks > 1 else next(
+            (c for c in range(min(2 * S * v, args.batch), 0, -1)
+             if legal(c)), 0)
+        if not M or not legal(M):
+            raise SystemExit(
+                f"no round size for --schedule {schedule}: need a "
+                f"divisor of --batch {args.batch} that is "
+                f"{'a multiple of' if schedule == 'interleaved' else 'at least'} "
+                f"--pipe {S}" + (f" (got --ticks {M})" if M else ""))
+        plan_kw["n_microbatches"] = M
     pplan = make_plan(
-        cfg, n_stages=model.n_stages,
-        schedule="gpipe" if args.mode == "sync" else "stream",
+        cfg, n_stages=model.n_stages, schedule=schedule,
+        virtual_stages=args.virtual_stages,
         partitioner=args.partitioner, profile_method=args.profile_method,
-        batch=args.batch, seq=args.seq)
+        batch=args.batch, seq=args.seq, **plan_kw)
     check_against_closed_forms(pplan)
     print(f"# {pplan.summary()}")
     stage_desc = " ".join(
@@ -117,6 +168,11 @@ def main(argv=None) -> int:
     print(f"# realized stages: {stage_desc}  "
           f"bottleneck={pplan.bottleneck_s:.2e}s "
           f"(uniform would be {pplan.uniform_bottleneck_s:.2e}s)")
+    if schedule in pipeline_stream.IR_SCHEDULES and args.mode != "sync":
+        print(f"# schedule {schedule}: round={pplan.round_microbatches} "
+              f"microbatches, bubble={pplan.bubble_frac:.3f}, "
+              f"act_stash={pplan.act_stash}, "
+              f"w_stash_depth={pplan.w_stash_depth}")
 
     if args.mode == "sync":
         state = pipeline_sync.init_state(model, key)
@@ -124,6 +180,12 @@ def main(argv=None) -> int:
             model, lr=args.lr, gamma=args.gamma,
             num_microbatches=cfg.mesh_plan.num_microbatches,
             clip=args.clip or None)
+    elif schedule in pipeline_stream.IR_SCHEDULES:
+        state = pipeline_stream.make_ir_state(
+            model, model.init(key), batch_sds, plan=pplan, mode=args.mode)
+        step_fn = pipeline_stream.make_ir_train_step(
+            model, plan=pplan, mode=args.mode, lr=args.lr,
+            gamma=args.gamma, clip=args.clip or None)
     else:
         state = pipeline_stream.init_state(
             model, key, batch_sds, mode=args.mode,

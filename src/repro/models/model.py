@@ -244,7 +244,7 @@ class Model:
             lambda a: a.reshape((-1,) + a.shape[2:]), stages["layers"])
 
     # --------------------------------------------------------- ragged stages
-    def partition_stage_params(self, stages, sizes):
+    def partition_stage_params(self, stages, sizes, *, n_chunks=None):
         """Regroup canonical stacked stage params into per-stage trees.
 
         ``stages`` is the init/checkpoint layout (leaves [S, Lps, ...]);
@@ -253,13 +253,32 @@ class Model:
         tuple of ``len(sizes)`` stage trees whose ``layers`` leaves are
         [sizes[k], ...] — the ragged layout the streaming runtime
         executes, realizing non-uniform (DP) plans.
+
+        ``n_chunks``: expected tree count when it is not the model's
+        device-stage count — interleaved/virtual-stage plans split the
+        same layers into ``n_stages · v`` chunk-stages, each its own
+        tree (device d then holds the chunk trees d, d+S, … — see
+        :meth:`device_chunk_params`).  Hybrid models pin one shared
+        block per *device*: chunking would hand sibling chunks copies
+        of that tied block which per-chunk gradient updates then fork,
+        so virtual stages are refused for hybrid models.
         """
+        want = n_chunks if n_chunks is not None else self.n_stages
         if sum(sizes) != self.cfg.n_layers:
             raise ValueError(f"partition sizes {tuple(sizes)} do not cover "
                              f"{self.cfg.n_layers} layers")
-        if len(sizes) != self.n_stages:
-            raise ValueError(f"{len(sizes)} partition stages for a "
-                             f"{self.n_stages}-stage model")
+        if len(sizes) != want:
+            raise ValueError(f"{len(sizes)} partition stages for "
+                             f"{want} (chunk-)stages")
+        if n_chunks is not None and n_chunks % self.n_stages:
+            raise ValueError(f"{n_chunks} chunks do not fold onto "
+                             f"{self.n_stages} devices")
+        if want > self.n_stages and "shared" in stages:
+            raise ValueError(
+                f"virtual stages ({want} chunks on {self.n_stages} "
+                f"devices) are unsupported for hybrid models: the "
+                f"per-device shared block is tied across a device's "
+                f"chunks and independent chunk updates would fork it")
         if min(sizes) < 1:
             raise ValueError(f"empty stage in partition sizes {tuple(sizes)}")
         flat = self.flat_layers(stages)
@@ -272,6 +291,23 @@ class Model:
             out.append(tree)
             lo += n
         return tuple(out)
+
+    def device_chunk_params(self, chunk_trees, n_devices=None):
+        """Group chunk-stage trees by hosting device.
+
+        ``chunk_trees`` is :meth:`partition_stage_params` output with
+        ``C = n_devices · v`` trees; device ``d`` hosts chunk-stages
+        ``d, d+S, …`` (Megatron round-robin placement), so the result is
+        a tuple of ``n_devices`` tuples of ``v`` trees — the layout a
+        real multi-device deployment materializes per device.
+        """
+        S = n_devices if n_devices is not None else self.n_stages
+        C = len(chunk_trees)
+        if S < 1 or C % S:
+            raise ValueError(f"{C} chunk trees do not fold onto {S} devices")
+        v = C // S
+        return tuple(tuple(chunk_trees[c * S + d] for c in range(v))
+                     for d in range(S))
 
     def stack_stage_params(self, stage_trees):
         """Inverse of :meth:`partition_stage_params` for uniform sizes:

@@ -20,10 +20,15 @@ This subsystem makes both explicit and checkable:
                     the ``uniform`` baseline.
   ``schedule_ir``   an event-timeline IR (typed fwd / bwd / update
                     events) emitting the paper's round-robin 1F1B
-                    schedule, GPipe fill-drain, and the streaming tick
-                    schedule; weight-version differences are *derived*
-                    by counting update events between a weight read and
-                    the minibatch's own gradient apply.
+                    schedule, GPipe fill-drain, the streaming tick
+                    schedule, PipeDream-flush 1F1B, PipeDream-2BW, and
+                    Megatron-style interleaved 1F1B (virtual stages);
+                    weight-version differences are *derived* by counting
+                    update events between a weight read and the
+                    minibatch's own gradient apply, and the bubble
+                    fraction / activation-stash / weight-stash-depth
+                    axes every family trades on are derived from the
+                    same timeline.
   ``api``           ``plan(config, n_stages) -> PipelinePlan``, consumed
                     by ``core/simulator.py`` (arbitrary-schedule
                     staleness), ``core/pipeline_stream.py`` (prediction
@@ -38,18 +43,22 @@ Quick start::
     p = plan(cfg, n_stages=4, schedule="stream", partitioner="dp")
     print(p.summary())          # partition, s_fwd/s_bwd, bottleneck
 """
-from repro.planner.api import (PipelinePlan, SCHEDULES,
+from repro.planner.api import (PipelinePlan, ROUND_SCHEDULES, SCHEDULES,
                                check_against_closed_forms, plan)
 from repro.planner.partition import (Partition, dp_split,
                                      profile_stage_costs, uniform)
 from repro.planner.profiler import (LayerProfile, ModelProfile,
                                     profile_model, synthetic_profile)
 from repro.planner.schedule_ir import (Event, Schedule, emit, gpipe,
-                                       round_robin_1f1b, streaming)
+                                       interleaved_1f1b, one_f_one_b,
+                                       pipedream_2bw, round_robin_1f1b,
+                                       streaming)
 
 __all__ = [
-    "PipelinePlan", "SCHEDULES", "plan", "check_against_closed_forms",
+    "PipelinePlan", "SCHEDULES", "ROUND_SCHEDULES", "plan",
+    "check_against_closed_forms",
     "Partition", "dp_split", "profile_stage_costs", "uniform",
     "LayerProfile", "ModelProfile", "profile_model", "synthetic_profile",
     "Event", "Schedule", "emit", "gpipe", "round_robin_1f1b", "streaming",
+    "one_f_one_b", "pipedream_2bw", "interleaved_1f1b",
 ]

@@ -24,17 +24,27 @@ class PipelinePlan:
     """Everything the runtimes need to execute one pipeline layout.
 
     ``s_fwd``/``s_bwd`` are the IR-derived weight-version differences per
-    stage (SpecTrain's prediction distances, Eqs. 5–6 generalized);
-    ``bwd_lag`` is the injection→backward tick distance per stage (how
-    long a minibatch's gradient is in flight); ``fb_gap`` is the
-    same-stage forward→backward distance (how long each stage stashes an
-    input activation — the streaming runtime's ring gather offsets);
-    ``partition`` maps layers to stages — an *executable* artifact: the
-    streaming runtime regroups stage weights by its layer ranges
-    (``stage_ranges``) and validates them against the model at state
+    (chunk-)stage (SpecTrain's prediction distances, Eqs. 5–6
+    generalized); ``bwd_lag`` is the injection→backward tick distance per
+    stage (how long a minibatch's gradient is in flight); ``fb_gap`` is
+    the same-stage forward→backward distance (how long each stage stashes
+    an input activation — the streaming runtime's ring gather offsets);
+    ``partition`` maps layers to (chunk-)stages — an *executable*
+    artifact: the runtimes regroup stage weights by its layer ranges
+    (``stage_ranges``) and validate them against the model at state
     construction, so non-uniform (DP) partitions are run, not just
     logged; ``stage_costs_s`` is the modelled per-stage time under that
     partition and ``bottleneck_s`` its max (the slowest stage).
+
+    ``virtual_stages`` (interleaved schedules) is the chunk count v per
+    device: the plan then describes ``n_chunks = n_stages·v``
+    chunk-stages executed on ``n_stages`` devices, device d hosting
+    chunks ``d, d+S, …``, and every per-stage vector has length
+    ``n_chunks``.  ``round_microbatches`` is the microbatch count per
+    flush round (1f1b/gpipe/interleaved) or accumulation group (2bw);
+    ``bubble_frac``, ``act_stash``, and ``w_stash_depth`` are derived
+    from the IR timeline — the bubble-vs-memory axes the schedule family
+    trades on (see docs/SCHEDULES.md).
     """
     n_stages: int
     schedule: str
@@ -47,13 +57,28 @@ class PipelinePlan:
     bottleneck_s: float = 0.0
     uniform_bottleneck_s: float = 0.0
     stage_costs_s: Tuple[float, ...] = ()
+    virtual_stages: int = 1
+    round_microbatches: int = 0
+    bubble_frac: float = 0.0
+    act_stash: Tuple[int, ...] = ()
+    w_stash_depth: Tuple[int, ...] = ()
     profile: Optional[pf.ModelProfile] = field(default=None, repr=False)
     ir: Optional[ir.Schedule] = field(default=None, repr=False, hash=False,
                                       compare=False)
 
     @property
+    def n_chunks(self) -> int:
+        """Logical pipeline depth: chunk-stages a microbatch traverses."""
+        return self.n_stages * self.virtual_stages
+
+    @property
+    def n_devices(self) -> int:
+        """Physical devices (= n_stages; chunks fold onto them)."""
+        return self.n_stages
+
+    @property
     def stage_ranges(self) -> Tuple[Tuple[int, int], ...]:
-        """Per-stage [lo, hi) layer index ranges the runtime executes."""
+        """Per-(chunk-)stage [lo, hi) layer ranges the runtime executes."""
         return self.partition.stages()
 
     @property
@@ -64,9 +89,9 @@ class PipelinePlan:
         vec = self.s_fwd if phase == "forward" else self.s_bwd
         if phase not in ("forward", "backward"):
             raise ValueError(phase)
-        if not 0 <= stage < self.n_stages:
+        if not 0 <= stage < self.n_chunks:
             raise ValueError(f"stage {stage} out of range for "
-                             f"{self.n_stages} stages")
+                             f"{self.n_chunks} stages")
         return vec[stage]
 
     @property
@@ -75,7 +100,8 @@ class PipelinePlan:
         return max(max(self.bwd_lag), max(self.fb_gap)) + 1
 
     def summary(self) -> str:
-        return (f"plan[{self.schedule} x{self.n_stages} "
+        v = (f" v={self.virtual_stages}" if self.virtual_stages > 1 else "")
+        return (f"plan[{self.schedule} x{self.n_stages}{v} "
                 f"part={self.partitioner}:{self.partition.sizes()} "
                 f"s_fwd={self.s_fwd} s_bwd={self.s_bwd} "
                 f"bottleneck={self.bottleneck_s:.2e}s]")
@@ -84,51 +110,80 @@ class PipelinePlan:
 def plan(config=None, n_stages: int = 2, *, schedule: str = "1f1b_rr",
          partitioner: str = "dp", profile: Optional[pf.ModelProfile] = None,
          profile_method: str = "analytic", batch: int = 1, seq: int = 32,
-         n_layers: Optional[int] = None,
+         n_layers: Optional[int] = None, virtual_stages: int = 1,
+         n_microbatches: Optional[int] = None,
          keep_ir: bool = True, validate: bool = True) -> PipelinePlan:
     """Build a :class:`PipelinePlan`.
 
     ``config`` is an ``ArchConfig`` (profiled via ``profile_method`` at
     the run's ``batch``/``seq`` shape), or None with an explicit
     ``profile`` or bare ``n_layers`` (uniform unit costs).
-    ``schedule`` ∈ {"1f1b_rr", "gpipe", "stream"}.
+    ``schedule`` ∈ {"1f1b_rr", "gpipe", "stream", "1f1b", "2bw",
+    "interleaved"}.  ``virtual_stages`` (interleaved only) is the chunk
+    count v per device; the partition then splits layers into
+    ``n_stages·v`` chunk-stages.  ``n_microbatches`` overrides the
+    schedule's default round/group size (must divide the run's batch for
+    the IR-interpreter runtime).
     """
     if schedule not in ir.EMITTERS:
         raise KeyError(
             f"unknown schedule {schedule!r}; known: {sorted(ir.EMITTERS)}")
+    if virtual_stages < 1:
+        raise ValueError(f"virtual_stages must be >= 1, got {virtual_stages}")
+    if virtual_stages > 1 and schedule != "interleaved":
+        raise ValueError(
+            f"virtual_stages={virtual_stages} requires "
+            f"schedule='interleaved', got {schedule!r}")
+    n_chunks = n_stages * virtual_stages
     if profile is None:
         if config is not None:
             profile = pf.profile_model(config, method=profile_method,
                                        batch=batch, seq=seq)
         else:
-            L = n_layers if n_layers is not None else n_stages
+            L = n_layers if n_layers is not None else n_chunks
             profile = pf.synthetic_profile([1.0] * L)
-    if profile.n_layers < n_stages:
+    if profile.n_layers < n_chunks:
         raise ValueError(f"{profile.n_layers} layers cannot fill "
-                         f"{n_stages} stages")
+                         f"{n_chunks} (chunk-)stages")
 
-    part = pt.partition_profile(profile, n_stages, method=partitioner)
+    part = pt.partition_profile(profile, n_chunks, method=partitioner)
     costs = pt.profile_stage_costs(profile, part)
     cost = max(costs)
     ucost = pt.profile_bottleneck(
-        profile, pt.uniform(profile.n_layers, n_stages))
+        profile, pt.uniform(profile.n_layers, n_chunks))
 
-    sched = ir.emit(schedule, n_stages)
+    kw = {}
+    if schedule == "interleaved":
+        kw["v"] = virtual_stages
+    if n_microbatches is not None and schedule in ROUND_SCHEDULES:
+        kw["n_microbatches"] = n_microbatches
+    sched = ir.emit(schedule, n_stages, **kw)
     if validate:
         sched.validate()
     mb = sched.steady_minibatch()
     s_fwd = sched.staleness_vector("forward", mb)
     s_bwd = sched.staleness_vector("backward", mb)
-    bwd_lag = tuple(sched.bwd_lag(k, mb) for k in range(n_stages))
-    fb_gap = tuple(sched.fwd_bwd_gap(k, mb) for k in range(n_stages))
+    bwd_lag = tuple(sched.bwd_lag(k, mb) for k in range(n_chunks))
+    fb_gap = tuple(sched.fwd_bwd_gap(k, mb) for k in range(n_chunks))
 
     return PipelinePlan(
         n_stages=n_stages, schedule=schedule, s_fwd=s_fwd, s_bwd=s_bwd,
         bwd_lag=bwd_lag, fb_gap=fb_gap,
         partition=part, partitioner=partitioner,
         bottleneck_s=cost, uniform_bottleneck_s=ucost,
-        stage_costs_s=costs, profile=profile,
-        ir=sched if keep_ir else None)
+        stage_costs_s=costs, virtual_stages=virtual_stages,
+        round_microbatches=sched.round_microbatches,
+        bubble_frac=sched.bubble_fraction(),
+        act_stash=tuple(sched.peak_activation_stash(k)
+                        for k in range(n_chunks)),
+        w_stash_depth=tuple(sched.weight_stash_depth(k)
+                            for k in range(n_chunks)),
+        profile=profile, ir=sched if keep_ir else None)
+
+
+# re-exported from the IR: the round/group schedule families the
+# pipeline_stream IR interpreter executes
+ROUND_SCHEDULES = ir.ROUND_SCHEDULES
 
 
 def check_against_closed_forms(p: PipelinePlan) -> None:
@@ -136,15 +191,18 @@ def check_against_closed_forms(p: PipelinePlan) -> None:
     forms — the property this subsystem exists to make checkable."""
     from repro.core import spectrain as st
     closed = {"1f1b_rr": st.version_difference_paper,
-              "stream": st.version_difference_stream}
+              "stream": st.version_difference_stream,
+              "1f1b": st.version_difference_1f1b,
+              "interleaved": st.version_difference_1f1b,
+              "2bw": st.version_difference_2bw}
     if p.schedule == "gpipe":
         if any(p.s_fwd) or any(p.s_bwd):
             raise AssertionError(f"gpipe must be staleness-free, got {p}")
         return
     fn = closed[p.schedule]
-    for k in range(p.n_stages):
+    for k in range(p.n_chunks):
         for phase, vec in (("forward", p.s_fwd), ("backward", p.s_bwd)):
-            want = fn(k, p.n_stages, phase)
+            want = fn(k, p.n_chunks, phase)
             if vec[k] != want:
                 raise AssertionError(
                     f"{p.schedule} stage {k} {phase}: IR-derived {vec[k]} "

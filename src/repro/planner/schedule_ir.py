@@ -7,7 +7,7 @@ is discrete: events carry a tick ``t`` plus a deterministic sub-tick order
 (fwd by ascending stage, then bwd by descending stage, then updates), so
 every weight read happens before the same tick's weight writes.
 
-Three emitters cover the schedules in this repo:
+Six emitters cover the schedules in this repo:
 
   * :func:`round_robin_1f1b` — the paper's §3.1 round-robin schedule (one
     global update per time unit, minibatch round trip of N−1 units).
@@ -15,13 +15,33 @@ Three emitters cover the schedules in this repo:
     update per round (the sync pipeline, ``core/pipeline_sync.py``).
   * :func:`streaming` — the tick schedule of ``core/pipeline_stream.py``
     (per-stage updates every tick, zero bubble after warm-up).
+  * :func:`one_f_one_b` — PipeDream-flush 1F1B: per-stage warm-up
+    forwards, steady one-forward-one-backward alternation, per-round
+    flush update.  Staleness-free like GPipe, but stage k stashes only
+    N−k activations instead of M.
+  * :func:`pipedream_2bw` — PipeDream-2BW: continuous 1F1B with
+    per-stage updates every ``m`` microbatches and double-buffered
+    weights; every read is pinned one version behind its own update
+    (uniform staleness 1).
+  * :func:`interleaved_1f1b` — Megatron-style interleaved 1F1B: each of
+    ``S`` devices hosts ``v ≥ 2`` virtual chunk-stages (device ``d``
+    holds chunk-stages ``d, d+S, …``), shrinking the flush bubble from
+    (S−1)/(M+S−1) to (S−1)/(M·v+S−1) per round.
 
 The point of the IR is that weight-version differences are **derived**,
 not assumed: :meth:`Schedule.staleness` counts the update events landing
 on a stage's weights between a minibatch's weight-read event and that
 minibatch's own gradient-apply event.  The closed forms in
-``core/spectrain.py`` (Eqs. 5–6 and the streaming variant) become checked
-properties of the corresponding emitters instead of trusted constants.
+``core/spectrain.py`` (Eqs. 5–6, the streaming variant, and the
+1F1B-flush / 2BW constants) become checked properties of the
+corresponding emitters instead of trusted constants.
+
+Events may carry a *pinned read version* ``wv`` (a count of updates
+already applied to that stage's weights) when the schedule dictates a
+specific weight version rather than "whatever is current" — 2BW's
+double-buffering is expressed this way, and the required weight-stash
+ring depth per stage is derived (:meth:`Schedule.weight_stash_depth`)
+instead of hardcoded.
 """
 from __future__ import annotations
 
@@ -38,7 +58,10 @@ class Event:
 
     ``stage``/``mb`` identify compute events; update events instead carry
     ``stages`` (weights written) and ``mbs`` (gradients applied) and keep
-    ``stage = mb = -1``.
+    ``stage = mb = -1``.  A compute event may pin its weight read to a
+    specific version ``wv`` (the number of updates already applied to its
+    stage's weights); ``wv = None`` means "read whatever is current" —
+    the only read semantic the pre-2BW emitters needed.
     """
     kind: str
     t: int
@@ -46,6 +69,7 @@ class Event:
     mb: int = -1
     stages: Tuple[int, ...] = ()
     mbs: Tuple[int, ...] = ()
+    wv: Optional[int] = None
 
     def sort_key(self):
         rank = _KIND_RANK[self.kind]
@@ -57,14 +81,27 @@ class Event:
 
 @dataclass
 class Schedule:
+    """Event timeline for ``n_stages`` logical pipeline stages.
+
+    ``n_devices`` is the number of physical devices executing them
+    (``None`` → one device per stage).  Interleaved/virtual-stage
+    schedules set ``n_devices < n_stages``: device ``d`` hosts the
+    chunk-stages ``{q : q % n_devices == d}`` (Megatron's round-robin
+    chunk placement), and at most one compute event per device runs per
+    tick.  Emitters of round-based schedules also set
+    ``round_microbatches`` — the number of microbatches per flush round
+    (1F1B, GPipe, interleaved) or per accumulation group (2BW)."""
     name: str
     n_stages: int
     events: List[Event] = field(default_factory=list)
+    n_devices: Optional[int] = None
+    round_microbatches: int = 0
 
     def __post_init__(self):
         self.events = sorted(self.events, key=Event.sort_key)
         self._index: Dict[Tuple[str, int, int], int] = {}
         self._own_update: Dict[Tuple[int, int], int] = {}
+        self._ver_prefix: Dict[int, List[int]] = {}
         for i, e in enumerate(self.events):
             if e.kind == UPDATE:
                 for k in e.stages:
@@ -80,10 +117,32 @@ class Schedule:
     def minibatches(self) -> Tuple[int, ...]:
         return tuple(sorted({e.mb for e in self.events if e.kind == FWD}))
 
+    def device_of(self, stage: int) -> int:
+        """Physical device hosting a (chunk-)stage."""
+        return stage % (self.n_devices or self.n_stages)
+
+    def _versions(self, stage: int) -> List[int]:
+        """Prefix counts: versions[i] = #updates on ``stage`` in
+        events[:i] (cached — version_at is hot in metric derivation)."""
+        if stage not in self._ver_prefix:
+            pre = [0]
+            for e in self.events:
+                pre.append(pre[-1] + (1 if e.kind == UPDATE
+                                      and stage in e.stages else 0))
+            self._ver_prefix[stage] = pre
+        return self._ver_prefix[stage]
+
     def version_at(self, event_idx: int, stage: int) -> int:
         """#updates touching ``stage``'s weights strictly before an event."""
-        return sum(1 for e in self.events[:event_idx]
-                   if e.kind == UPDATE and stage in e.stages)
+        return self._versions(stage)[event_idx]
+
+    def read_version(self, event_idx: int, stage: int) -> int:
+        """Weight version a compute event reads: its pinned ``wv`` when
+        the schedule dictates one, else the current version."""
+        e = self.events[event_idx]
+        if e.kind != UPDATE and e.wv is not None:
+            return e.wv
+        return self.version_at(event_idx, stage)
 
     def complete_minibatches(self) -> Tuple[int, ...]:
         """Minibatches with fwd+bwd on every stage and an applied update."""
@@ -138,7 +197,7 @@ class Schedule:
         own = self._own_update.get((mb, stage))
         if read is None or own is None:
             raise ValueError(f"minibatch {mb} incomplete on stage {stage}")
-        return self.version_at(own, stage) - self.version_at(read, stage)
+        return self.version_at(own, stage) - self.read_version(read, stage)
 
     def staleness_vector(self, phase: str, mb: Optional[int] = None
                          ) -> Tuple[int, ...]:
@@ -170,6 +229,58 @@ class Schedule:
             raise ValueError(f"minibatch {mb} incomplete on stage {stage}")
         return self.events[bwd].t - self.events[fwd].t
 
+    # ------------------------------------------------------------ metrics
+    def bubble_fraction(self) -> float:
+        """Idle fraction of device·tick slots over the whole timeline —
+        the schedule-family cost axis (1F1B pays (S−1)/(M+S−1) per
+        round, interleaved (S−1)/(M·v+S−1), streaming ~0 past warm-up).
+
+        Slot width per tick is inferred as the peak per-(device, tick)
+        occupancy: the unit-time emitters (streaming, round-robin) fit
+        one fwd + one bwd per time unit, the list-scheduled families one
+        op per tick."""
+        D = self.n_devices or self.n_stages
+        per_slot: Dict[Tuple[int, int], int] = {}
+        for e in self.events:
+            if e.kind == UPDATE:
+                continue
+            key = (self.device_of(e.stage), e.t)
+            per_slot[key] = per_slot.get(key, 0) + 1
+        if not per_slot:
+            return 0.0
+        width = max(per_slot.values())
+        busy = sum(per_slot.values())
+        return 1.0 - busy / (D * self.makespan() * width)
+
+    def peak_activation_stash(self, stage: int) -> int:
+        """Max #microbatches simultaneously holding a stashed input
+        activation on ``stage`` (forward issued, backward not yet done) —
+        the activation-memory axis: M for GPipe, S−k for 1F1B."""
+        cur = peak = 0
+        for e in self.events:
+            if e.stage != stage:
+                continue
+            if e.kind == FWD:
+                cur += 1
+                peak = max(peak, cur)
+            elif e.kind == BWD:
+                cur -= 1
+        return peak
+
+    def weight_stash_depth(self, stage: int) -> int:
+        """Weight versions ``stage`` must retain: 1 + the max distance
+        between an event's current version and the (possibly pinned)
+        version it reads.  1 for every always-read-current schedule,
+        2 for 2BW's double buffering — the runtime sizes its weight
+        rings from this instead of a hardcoded constant."""
+        depth = 1
+        for i, e in enumerate(self.events):
+            if e.kind == UPDATE or e.stage != stage:
+                continue
+            lag = self.version_at(i, stage) - self.read_version(i, stage)
+            depth = max(depth, lag + 1)
+        return depth
+
     # ----------------------------------------------------------- validity
     def validate(self) -> None:
         """Dataflow sanity: activations and cotangents exist when read.
@@ -178,6 +289,10 @@ class Schedule:
         * bwd(m, N−1) strictly after fwd(m, N−1)
         * bwd(m, k) strictly after bwd(m, k+1)
         * m's update on stage k strictly after bwd(m, k)
+        * a pinned read version exists when read (wv ≤ current version)
+        * at most one compute event per (device, kind) per tick — the
+          unit-time emitters (streaming, round-robin) model a time unit
+          as one fwd slot plus one bwd slot
         """
         N = self.n_stages
         for m in self.complete_minibatches():
@@ -197,26 +312,48 @@ class Schedule:
                 if not b[k] < self._own_update[(m, k)]:
                     raise ValueError(
                         f"{self.name}: update of {m} before bwd({m},{k})")
+        busy: Dict[Tuple[int, int, str], Tuple[str, int]] = {}
+        for i, e in enumerate(self.events):
+            if e.kind == UPDATE:
+                continue
+            if e.wv is not None and e.wv > self.version_at(i, e.stage):
+                raise ValueError(
+                    f"{self.name}: {e.kind}({e.mb},{e.stage}) pins "
+                    f"version {e.wv}, only "
+                    f"{self.version_at(i, e.stage)} exist")
+            slot = (self.device_of(e.stage), e.t, e.kind)
+            if slot in busy:
+                raise ValueError(
+                    f"{self.name}: device {slot[0]} double-booked at "
+                    f"t={e.t}: {busy[slot]} and ({e.kind},{e.mb})")
+            busy[slot] = (e.kind, e.mb)
 
     # ------------------------------------------------------------- render
     def render(self, max_ticks: int = 24) -> str:
-        """ASCII timeline: one row per stage, ``f<mb>``/``b<mb>`` cells."""
+        """ASCII timeline: one row per *device*, ``f<mb>``/``b<mb>``
+        cells.  With virtual stages (n_devices < n_stages) a cell is
+        ``f<mb>.<c>`` where ``c`` is the device-local chunk index."""
+        D = self.n_devices or self.n_stages
+        v = self.n_stages // D
         grid: Dict[Tuple[int, int], List[str]] = {}
         for e in self.events:
             if e.kind == UPDATE:
                 for k in e.stages:
-                    grid.setdefault((k, e.t), []).append("u")
+                    grid.setdefault((self.device_of(k), e.t), []).append("u")
             else:
-                grid.setdefault((e.stage, e.t), []).append(
-                    f"{e.kind[0]}{e.mb}")
+                cell = f"{e.kind[0]}{e.mb}"
+                if v > 1:
+                    cell += f".{e.stage // D}"
+                grid.setdefault((self.device_of(e.stage), e.t),
+                                []).append(cell)
         T = min(self.makespan(), max_ticks)
-        width = max([len("+".join(grid.get((k, t), [])))
-                     for k in range(self.n_stages) for t in range(T)] + [2])
+        width = max([len("+".join(grid.get((d, t), [])))
+                     for d in range(D) for t in range(T)] + [2])
         rows = []
-        for k in range(self.n_stages):
-            cells = ["+".join(grid.get((k, t), [])).ljust(width)
+        for d in range(D):
+            cells = ["+".join(grid.get((d, t), [])).ljust(width)
                      for t in range(T)]
-            rows.append(f"s{k} |" + "|".join(cells) + "|")
+            rows.append(f"d{d} |" + "|".join(cells) + "|")
         return "\n".join(rows)
 
 
@@ -272,7 +409,7 @@ def gpipe(n_stages: int, n_microbatches: Optional[int] = None,
                     BWD, base + (M + N - 1) + (M - 1 - m) + (N - 1 - k),
                     stage=k, mb=r * M + m))
         ev.append(Event(UPDATE, base + span - 1, stages=all_stages, mbs=mbs))
-    return Schedule("gpipe", N, ev)
+    return Schedule("gpipe", N, ev, round_microbatches=M)
 
 
 def streaming(n_stages: int, n_ticks: Optional[int] = None) -> Schedule:
@@ -297,11 +434,195 @@ def streaming(n_stages: int, n_ticks: Optional[int] = None) -> Schedule:
     return Schedule("stream", N, ev)
 
 
+# ---------------------------------------------------------------------------
+# 1F1B family: PipeDream-flush, PipeDream-2BW, Megatron interleaved.
+#
+# All three share one construction: a fixed Megatron-style op order per
+# device (warm-up forwards, steady fwd/bwd alternation, cool-down
+# backwards) turned into a tick timeline by deterministic list
+# scheduling — each tick, each device runs its next op iff the op's
+# dataflow inputs were produced at a strictly earlier tick.
+
+
+def _device_op_order(S: int, v: int, M: int, d: int
+                     ) -> List[Tuple[str, int, int]]:
+    """Op sequence ``(kind, mb, chunk_stage)`` for device ``d`` over one
+    round of ``M`` microbatches across ``v`` chunks per device.
+
+    Chunk-stage ``q = c·S + d`` is device ``d``'s ``c``-th chunk
+    (Megatron placement); forwards walk microbatches in groups of S per
+    chunk, backwards the same groups with chunks reversed.  Warm-up
+    depth is Megatron's: S−d−1 for v = 1, else 2(S−d−1) + (v−1)·S.
+    """
+    n = M * v
+
+    def fwd_op(i):
+        if v == 1:
+            mb, c = i, 0
+        else:
+            g, r = divmod(i, S * v)
+            c, mb = r // S, g * S + r % S
+        return (FWD, mb, c * S + d)
+
+    def bwd_op(j):
+        if v == 1:
+            mb, c = j, 0
+        else:
+            g, r = divmod(j, S * v)
+            c, mb = v - 1 - r // S, g * S + r % S
+        return (BWD, mb, c * S + d)
+
+    warmup = min(n, (S - d - 1) if v == 1 else 2 * (S - d - 1) + (v - 1) * S)
+    ops = [fwd_op(i) for i in range(warmup)]
+    for j in range(n - warmup):
+        ops.append(fwd_op(warmup + j))
+        ops.append(bwd_op(j))
+    ops.extend(bwd_op(j) for j in range(n - warmup, n))
+    return ops
+
+
+def _list_schedule(S: int, v: int, M: int, *, mb_base: int = 0,
+                   t_base: int = 0) -> Dict[Tuple[str, int, int], int]:
+    """Tick assignment ``(kind, mb, chunk_stage) -> t`` for one round.
+
+    Time-stepped: each tick every device runs its next queued op iff
+    that op's producer finished at a strictly earlier tick (fwd needs
+    the previous chunk-stage's fwd, bwd the next chunk-stage's bwd, the
+    last chunk-stage's bwd its own fwd).
+    """
+    C = S * v
+    queues = [_device_op_order(S, v, M, d) for d in range(S)]
+    heads = [0] * S
+    done: Dict[Tuple[str, int, int], int] = {}
+    t = t_base
+    while any(heads[d] < len(queues[d]) for d in range(S)):
+        progressed = False
+        for d in range(S):
+            if heads[d] >= len(queues[d]):
+                continue
+            kind, mb, q = queues[d][heads[d]]
+            if kind == FWD:
+                ready = q == 0 or done.get((FWD, mb, q - 1), t) < t
+            elif q == C - 1:
+                ready = done.get((FWD, mb, q), t) < t
+            else:
+                ready = done.get((BWD, mb, q + 1), t) < t
+            if ready:
+                done[(kind, mb, q)] = t
+                heads[d] += 1
+                progressed = True
+        if not progressed:
+            # nothing ran this tick ⇒ `done` is unchanged ⇒ nothing can
+            # ever become ready: the fixed per-device op order is cyclic
+            raise RuntimeError(
+                f"list scheduler deadlocked at t={t} "
+                f"(S={S}, v={v}, M={M})")
+        t += 1
+    return {(k, mb + mb_base, q): tt for (k, mb, q), tt in done.items()}
+
+
+def _flush_rounds(name: str, S: int, v: int, M: int, n_rounds: int
+                  ) -> Schedule:
+    """Rounds of M microbatches, per-stage flush update at each stage's
+    last backward of the round — staleness-free by construction."""
+    if v > 1 and M % S:
+        raise ValueError(
+            f"interleaved needs n_microbatches % n_stages == 0, got "
+            f"M={M}, S={S}")
+    C = S * v
+    ev: List[Event] = []
+    t_base = 0
+    for r in range(n_rounds):
+        ticks = _list_schedule(S, v, M, mb_base=r * M, t_base=t_base)
+        mbs = tuple(range(r * M, (r + 1) * M))
+        for (kind, mb, q), t in ticks.items():
+            ev.append(Event(kind, t, stage=q, mb=mb))
+        for q in range(C):
+            last_b = max(t for (k, mb, qq), t in ticks.items()
+                         if k == BWD and qq == q)
+            ev.append(Event(UPDATE, last_b, stages=(q,), mbs=mbs))
+        t_base = max(ticks.values()) + 1
+    return Schedule(name, C, ev, n_devices=S, round_microbatches=M)
+
+
+def _rounds_for(C: int, M: int, n_rounds: Optional[int]) -> int:
+    # enough rounds that a steady minibatch (index ≥ 2C) exists
+    if n_rounds is not None:
+        return n_rounds
+    need = 2 * C + 2
+    return max(3, -(-need // M) + 1)
+
+
+def one_f_one_b(n_stages: int, n_microbatches: Optional[int] = None,
+                n_rounds: Optional[int] = None) -> Schedule:
+    """PipeDream-flush 1F1B: stage k runs S−1−k warm-up forwards, then
+    one-forward-one-backward steady state, then drains; gradients
+    accumulate across the round's M microbatches and flush in one
+    per-stage update.  Staleness-free (s_fwd = s_bwd = 0) at the same
+    (S−1)/(M+S−1) bubble as GPipe, but stage k stashes only S−k
+    activations instead of M."""
+    S = n_stages
+    M = n_microbatches or max(2, 2 * S)
+    return _flush_rounds("1f1b", S, 1, M, _rounds_for(S, M, n_rounds))
+
+
+def interleaved_1f1b(n_stages: int, n_microbatches: Optional[int] = None,
+                     *, v: int = 2, n_rounds: Optional[int] = None
+                     ) -> Schedule:
+    """Megatron-style interleaved 1F1B: device d hosts the v chunk-stages
+    ``d, d+S, …``; the round's bubble shrinks to (S−1)/(M·v+S−1) at the
+    price of v× more in-flight chunk activations and p2p traffic.  Still
+    staleness-free (flush update per round)."""
+    if v < 1:
+        raise ValueError(f"virtual stages v must be >= 1, got {v}")
+    S = n_stages
+    M = n_microbatches if n_microbatches is not None else max(2 * S, 2)
+    return _flush_rounds("interleaved", S, v, M,
+                         _rounds_for(S * v, M, n_rounds))
+
+
+def pipedream_2bw(n_stages: int, n_microbatches: Optional[int] = None,
+                  n_groups: Optional[int] = None) -> Schedule:
+    """PipeDream-2BW: continuous 1F1B (no flush) with per-stage updates
+    every ``m = n_microbatches`` microbatches and double-buffered
+    weights.  Group g's fwd *and* bwd reads are pinned (``wv``) to the
+    version with g−1 updates applied — the newest version every stage is
+    guaranteed to have when the group's first forward arrives, given the
+    paper's m ≥ S constraint.  Derived staleness is therefore a uniform
+    1 and the derived weight-stash depth 2 (the "2-buffered weights")."""
+    S = n_stages
+    m = n_microbatches or max(2, S)
+    if m < S:
+        raise ValueError(
+            f"2bw needs n_microbatches >= n_stages for 2 weight buffers "
+            f"to suffice, got m={m}, S={S}")
+    G = n_groups or max(3, -(-(2 * S + 2) // m) + 1)
+    ticks = _list_schedule(S, 1, m * G)
+    ev: List[Event] = []
+    for (kind, mb, q), t in ticks.items():
+        ev.append(Event(kind, t, stage=q, mb=mb,
+                        wv=max(0, mb // m - 1)))
+    for g in range(G):
+        mbs = tuple(range(g * m, (g + 1) * m))
+        for q in range(S):
+            last_b = max(ticks[(BWD, mb, q)] for mb in mbs)
+            ev.append(Event(UPDATE, last_b, stages=(q,), mbs=mbs))
+    return Schedule("2bw", S, ev, round_microbatches=m)
+
+
 EMITTERS = {
     "1f1b_rr": round_robin_1f1b,
     "gpipe": gpipe,
     "stream": streaming,
+    "1f1b": one_f_one_b,
+    "2bw": pipedream_2bw,
+    "interleaved": interleaved_1f1b,
 }
+
+# schedules whose emitters take a per-round/group microbatch count and
+# which core/pipeline_stream.py executes through the IR interpreter —
+# the single source for planner/api.py and the runtimes
+ROUND_SCHEDULES = ("gpipe", "1f1b", "2bw", "interleaved")
 
 
 def emit(name: str, n_stages: int, **kw) -> Schedule:

@@ -80,28 +80,55 @@ def reshard_params(params: Dict[str, Any], *, new_pipe: int,
 
 def elastic_restate(model_old, model_new, state: Dict[str, Any],
                     batch_sds, *, mode: str = "spectrain",
-                    ticks_per_step: int = 1) -> Dict[str, Any]:
-    """Full state transition between two Model instances (new mesh plan)."""
+                    ticks_per_step: int = 1, plan=None) -> Dict[str, Any]:
+    """Full state transition between two Model instances (new mesh plan).
+
+    ``plan``: optional ``repro.planner.PipelinePlan`` for the *new*
+    topology.  A stream plan flows into ``pipeline_stream.make_state``
+    (ragged per-stage trees per its partition); an IR-schedule plan
+    (1f1b / 2bw / interleaved / gpipe) builds an IR-interpreter state
+    instead, regrouping the carried-over layers into the plan's
+    ``n_chunks`` chunk trees — an elastic event can therefore also move
+    a job between schedule families, at the usual cost of dropping the
+    in-flight microbatches (and, for 2BW, restarting the double buffer
+    from the carried weights)."""
     from repro.core import pipeline_stream
     params = reshard_params(state["params"],
                             new_pipe=model_new.n_stages,
                             old_pipe=model_old.n_stages)
-    new_state = pipeline_stream.make_state(
-        model_new, params, batch_sds, mode=mode,
-        ticks_per_step=ticks_per_step)
+    ir_plan = plan is not None and \
+        plan.schedule in pipeline_stream.IR_SCHEDULES
+    if ir_plan:
+        new_state = pipeline_stream.make_ir_state(
+            model_new, params, batch_sds, plan=plan, mode=mode)
+        sizes = plan.partition.sizes()
+        n_chunks: Any = plan.n_chunks
+    else:
+        new_state = pipeline_stream.make_state(
+            model_new, params, batch_sds, mode=mode,
+            ticks_per_step=ticks_per_step, plan=plan)
+        sizes = (plan.partition.sizes() if plan is not None
+                 else (model_new.layers_per_stage,) * model_new.n_stages)
+        n_chunks = None
     # momentum carries over (same restack), so prediction stays warm;
-    # mirror the layout make_state chose for the new params (ragged
-    # per-stage trees when model_new pipelines, stacked otherwise)
+    # mirror the layout the state constructor chose for the new params
+    # (ragged per-(chunk-)stage trees when model_new pipelines, stacked
+    # otherwise)
     mom_stacked = reshard_params(
         {"stages": state["momentum"]["stages"]},
         new_pipe=model_new.n_stages)["stages"]
     if isinstance(new_state["params"]["stages"], (tuple, list)):
         mom_stages: Any = model_new.partition_stage_params(
-            mom_stacked,
-            (model_new.layers_per_stage,) * model_new.n_stages)
+            mom_stacked, sizes, n_chunks=n_chunks)
     else:
         mom_stages = mom_stacked
     new_state["momentum"] = {"outer": state["momentum"]["outer"],
                              "stages": mom_stages}
+    if "stash" in new_state:
+        # 2BW restarts its double buffer from the carried-over weights
+        new_state["stash"] = {
+            "params": jax.tree.map(jnp.array, new_state["params"]),
+            "momentum": jax.tree.map(jnp.array, new_state["momentum"]),
+        }
     new_state["step"] = state["step"]
     return new_state

@@ -129,12 +129,15 @@ _RING_TP = True
 
 def stream_state_shardings(model, state_sds: Dict[str, Any], mesh: Mesh,
                            rules: Dict[str, AxisVal], *, zero1: bool = True):
-    """NamedShardings for the streaming (or sync) train state.
+    """NamedShardings for the streaming (or sync / IR-interpreter) state.
 
     Handles both the canonical stacked param layout (sync pipeline /
-    single stage) and the streaming runtime's ragged per-stage trees —
-    detected off the state's ``stages`` entry being a tuple/list, whose
-    matching axes tree drops the leading 'stage' dim per leaf."""
+    single stage) and the ragged per-stage trees of the streaming and
+    IR-interpreter runtimes — detected off the state's ``stages`` entry
+    being a tuple/list, whose matching axes tree drops the leading
+    'stage' dim per leaf.  Virtual-stage states simply carry more chunk
+    trees (``n_chunks = S·v``); like all ragged trees they replicate
+    over ``pipe`` until explicit per-stage placement lands (ROADMAP)."""
     sizes = axis_sizes(mesh)
     param_axes = model.param_axes()
     p_sds = state_sds.get("params", {})
@@ -159,6 +162,16 @@ def stream_state_shardings(model, state_sds: Dict[str, Any], mesh: Mesh,
             momentum_rules(None, rules, mesh) if zero1 else rules),
         "step": rep,
     }
+    if "stash" in state_sds:
+        # IR-interpreter 2BW double buffer: previous weight/momentum
+        # version, mirroring the live trees' placement leaf-for-leaf
+        out["stash"] = {
+            "params": shardings_for(param_axes, state_sds["stash"]["params"],
+                                    mesh, rules),
+            "momentum": shardings_for(
+                param_axes, state_sds["stash"]["momentum"], mesh,
+                momentum_rules(None, rules, mesh) if zero1 else rules),
+        }
     ring_axes = {
         "fwd_buf": ("stage", "act_batch", None, "act_embed"),
         "bwd_buf": ("stage", "act_batch", None, "act_embed"),

@@ -1,0 +1,23 @@
+"""Docs don't rot: the CI docs job's checks also run in tier-1.
+
+``tools/check_docs.py`` verifies that intra-repo markdown links resolve
+and that fenced python/bash code blocks in README/docs/EXPERIMENTS at
+least parse.
+"""
+import os
+import subprocess
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_docs_links_and_snippets():
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "check_docs.py")],
+        capture_output=True, text=True, cwd=REPO)
+    assert r.returncode == 0, f"docs check failed:\n{r.stderr}{r.stdout}"
+
+
+def test_required_docs_exist():
+    for f in ("README.md", "docs/ARCHITECTURE.md", "docs/SCHEDULES.md"):
+        assert os.path.exists(os.path.join(REPO, f)), f

@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""Docs rot check: intra-repo markdown links must resolve and fenced
+``python``/``bash``/``sh`` code blocks must at least parse.
+
+Run from anywhere inside the repo:
+
+    python tools/check_docs.py            # checks the default doc set
+    python tools/check_docs.py README.md  # or explicit files
+
+Checks, per markdown file:
+
+  * every ``[text](target)`` link whose target is not an URL or a pure
+    anchor points at an existing file/directory (anchors on existing
+    files are accepted; anchor validity itself is not checked);
+  * every fenced code block tagged ``python`` compiles
+    (``compile(..., "exec")``);
+  * every fenced code block tagged ``bash``/``sh`` passes ``bash -n``
+    (skipped with a notice if bash is unavailable).
+
+Exit code 0 = clean, 1 = at least one problem (listed on stderr).
+"""
+from __future__ import annotations
+
+import re
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+DEFAULT_DOCS = [
+    "README.md",
+    "EXPERIMENTS.md",
+    "ROADMAP.md",
+    "docs/ARCHITECTURE.md",
+    "docs/SCHEDULES.md",
+]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+_BASH = shutil.which("bash")
+
+
+def iter_code_blocks(text: str):
+    """Yield (language, first_line_number, code) for fenced blocks."""
+    lang, start, buf = None, 0, []
+    for i, line in enumerate(text.splitlines(), 1):
+        m = FENCE_RE.match(line.strip())
+        if m and lang is None:
+            lang, start, buf = m.group(1).lower(), i, []
+        elif line.strip() == "```" and lang is not None:
+            yield lang, start, "\n".join(buf)
+            lang = None
+        elif lang is not None:
+            buf.append(line)
+
+
+def check_links(path: Path, text: str, problems: list) -> None:
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        target = target.split("#", 1)[0]
+        if not target:
+            continue
+        resolved = (path.parent / target).resolve()
+        if not resolved.exists():
+            problems.append(f"{path}: broken link -> {m.group(1)}")
+
+
+def check_code(path: Path, text: str, problems: list) -> None:
+    for lang, line, code in iter_code_blocks(text):
+        if lang == "python":
+            try:
+                compile(code, f"{path}:{line}", "exec")
+            except SyntaxError as e:
+                problems.append(
+                    f"{path}:{line}: python block does not compile: {e}")
+        elif lang in ("bash", "sh"):
+            if _BASH is None:
+                print(f"note: bash unavailable, skipping shell block "
+                      f"at {path}:{line}")
+                continue
+            r = subprocess.run([_BASH, "-n"], input=code, text=True,
+                               capture_output=True)
+            if r.returncode != 0:
+                problems.append(
+                    f"{path}:{line}: shell block does not parse: "
+                    f"{r.stderr.strip()}")
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    files = [Path(a) for a in args] if args else \
+        [REPO / d for d in DEFAULT_DOCS]
+    problems: list = []
+    for f in files:
+        if not f.exists():
+            problems.append(f"{f}: file missing")
+            continue
+        text = f.read_text(encoding="utf-8")
+        check_links(f, text, problems)
+        check_code(f, text, problems)
+    for p in problems:
+        print(p, file=sys.stderr)
+    n = sum(1 for f in files if f.exists())
+    print(f"checked {n} doc file(s): "
+          f"{'OK' if not problems else f'{len(problems)} problem(s)'}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
