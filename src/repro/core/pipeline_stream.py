@@ -27,13 +27,16 @@ residuals.
 
 Stage parameters are **ragged per-stage trees**: ``state["params"]
 ["stages"]`` is a tuple of ``S`` pytrees whose ``layers`` leaves are
-``[L_k, ...]`` for the plan's per-stage layer counts.  Activations are
-``d_model``-wide at every cut, so the rings stay uniform ``[S, ...]``
-arrays — only weights (and their momentum/stash/prediction mirrors) go
-ragged.  A planner ``PipelinePlan`` with a non-uniform (DP) partition is
-therefore *executed*, not just logged: ``make_state`` regroups the
-canonical stacked init layout via ``Model.partition_stage_params`` and
-validates the plan's layer ranges against the model.
+``[L_k, ...]`` for the plan's per-stage layer counts — the same ragged
+canonical layout ``Model.init`` produces (no ``n_layers % n_stages``
+constraint anywhere).  Activations are ``d_model``-wide at every cut,
+so the rings stay uniform ``[S, ...]`` arrays — only weights (and
+their momentum/stash/prediction mirrors) go ragged.  A planner
+``PipelinePlan`` with a non-uniform (DP) partition is therefore
+*executed*, not just logged: ``make_state`` repartitions the canonical
+trees via ``Model.partition_stage_params`` (a no-op when the plan's
+sizes match; legacy stacked ``[S, Lps, ...]`` inputs are accepted and
+regrouped) and validates the plan's layer ranges against the model.
 
 Besides the streaming tick loop above, this module hosts an
 **IR-interpreter runtime** (``make_ir_state`` / ``make_ir_train_step``)
@@ -108,7 +111,7 @@ def stage_sizes(model, plan) -> Tuple[int, ...]:
     """
     S = model.n_stages
     if plan is None:
-        return (model.layers_per_stage,) * S
+        return tuple(model.stage_sizes)
     part = plan.partition
     if part.n_stages != plan.n_stages:
         raise ValueError(f"plan partition has {part.n_stages} stages but "
@@ -159,9 +162,10 @@ def make_state(model, params, batch_sds, *, mode: str = "spectrain",
                fused_predict: bool = False, plan=None) -> Dict[str, Any]:
     """Streaming train state: params + momentum + in-flight rings.
 
-    ``params`` is the canonical stacked init layout; for S > 1 its stage
-    weights are regrouped into ragged per-stage trees according to the
-    plan's partition (uniform without a plan) — see module docstring.
+    ``params`` is the ragged canonical init layout (legacy stacked
+    ``[S, Lps, ...]`` trees are accepted too); for S > 1 its stage
+    weights are repartitioned to the plan's sizes (the model's default
+    split without a plan) — see module docstring.
 
     ``ticks_per_step``: the global batch is split into this many per-tick
     minibatches; one train_step runs that many ticks via lax.scan (the
@@ -204,7 +208,9 @@ def make_state(model, params, batch_sds, *, mode: str = "spectrain",
     R = max(max(lag), max(gap)) + 1
     tok_sds = batch_sds["tokens"]
     B, seq = tok_sds.shape[0], tok_sds.shape[1]
-    assert B % ticks_per_step == 0, (B, ticks_per_step)
+    if B % ticks_per_step:
+        raise ValueError(f"global batch {B} not divisible by "
+                         f"ticks_per_step={ticks_per_step}")
     mb = B // ticks_per_step
     d = cfg.d_model
     cdt = jnp.dtype(cfg.compute_dtype)
@@ -494,9 +500,10 @@ def make_ir_state(model, params, batch_sds, *, plan,
     """Train state for the IR interpreter: chunked params + momentum
     (+ the 2BW double buffer when the IR derives a stash depth of 2).
 
-    ``params`` is the canonical stacked init layout; its stage weights
-    are regrouped into ``plan.n_chunks`` ragged chunk trees by the
-    plan's partition (virtual stages give a device several chunk trees —
+    ``params`` is the ragged canonical init layout (legacy stacked
+    trees are accepted); its stage weights are repartitioned into
+    ``plan.n_chunks`` ragged chunk trees by the plan's partition
+    (virtual stages give a device several chunk trees —
     ``Model.device_chunk_params`` recovers the per-device grouping).
     Unlike the streaming runtime there are no activation rings: the
     interpreter's in-flight activations live inside one traced round,
@@ -557,8 +564,12 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
 
     def step(state: Dict[str, Any], batch):
         B = jax.tree.leaves(batch)[0].shape[0]
-        assert B % M == 0, (
-            f"batch {B} not divisible by the plan's round size {M}")
+        # ValueError, not assert: these invariants guard user-supplied
+        # shapes and must survive `python -O`
+        if B % M:
+            raise ValueError(
+                f"batch {B} not divisible by the {plan.schedule!r} plan's "
+                f"round size (round_microbatches={M})")
         mbs = jax.tree.map(
             lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]), batch)
         mb = lambda m: jax.tree.map(lambda x: x[m], mbs)
@@ -631,9 +642,11 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
                     g_outer = acc(g_outer, go_embed)
                 else:
                     cots[(m, q)] = gx
-        assert not acts and not outs and not cots, (
-            "IR round program left in-flight tensors: "
-            f"{sorted(acts) + sorted(outs) + sorted(cots)}")
+        if acts or outs or cots:
+            raise ValueError(
+                f"{plan.schedule!r} round program (round size {M}) left "
+                f"in-flight tensors: "
+                f"{sorted(acts) + sorted(outs) + sorted(cots)}")
 
         grads = {"outer": g_outer, "stages": tuple(g_chunks)}
         grads = jax.tree.map(lambda g: g / M, grads)

@@ -1,12 +1,13 @@
 """Synchronous circular pipeline (GPipe semantics) — staleness-free baseline.
 
-Stage weights are stacked on a leading `stage` axis (sharded over the
-`pipe` mesh axis); microbatches rotate through the stage buffer with
-``jnp.roll`` (lowers to collective-permute on a sharded axis); autodiff
-through the tick scan produces the reverse pipeline.  Weight update is one
-synchronous momentum-SGD step per global batch — identical semantics to
-data parallelism, which is why it doubles as the staleness-free reference
-in every convergence test.
+Stage weights are the ragged per-stage canonical trees (tuple of
+``S`` pytrees — any partition executes, no divisibility constraint);
+microbatches rotate through the uniform ``[S, ...]`` activation buffer
+with ``jnp.roll`` (lowers to collective-permute on a sharded axis);
+autodiff through the tick scan produces the reverse pipeline.  Weight
+update is one synchronous momentum-SGD step per global batch —
+identical semantics to data parallelism, which is why it doubles as the
+staleness-free reference in every convergence test.
 """
 from __future__ import annotations
 
@@ -27,10 +28,16 @@ def pipeline_loss(model, params, batch, num_microbatches: int) -> jnp.ndarray:
         return model.loss(params, batch)
     M = num_microbatches
     outer, stages = params["outer"], params["stages"]
+    if not isinstance(stages, (tuple, list)):     # legacy stacked input
+        stages = model.partition_stage_params(stages, model.stage_sizes)
 
     x = model.embed(outer, batch)                    # [B, s, d]
     B = x.shape[0]
-    assert B % M == 0, (B, M)
+    if B % M:
+        # ValueError, not assert: guards a user-supplied shape and must
+        # survive `python -O`
+        raise ValueError(f"global batch {B} not divisible by "
+                         f"num_microbatches={M}")
     mb = B // M
     xs = x.reshape((M, mb) + x.shape[1:])
     T = M + S - 1
@@ -50,7 +57,11 @@ def pipeline_loss(model, params, batch, num_microbatches: int) -> jnp.ndarray:
             xs, jnp.clip(t, 0, M - 1), 0, keepdims=False)
         ins = jnp.roll(prev_out, 1, axis=0).at[0].set(x_t)
         ins = shard_act(ins, "stage", "act_batch", None, None)
-        out, aux_vec = jax.vmap(stage_fn)(stages, ins)
+        # per-stage python loop over the ragged stage trees (the
+        # stacked layout's vmap cannot span differently-shaped stages)
+        stage_outs = [stage_fn(stages[k], ins[k]) for k in range(S)]
+        out = jnp.stack([o for o, _ in stage_outs])
+        aux_vec = jnp.stack([a for _, a in stage_outs])
         valid = ((t - karange) >= 0) & ((t - karange) < M)
         aux_sum = aux_sum + jnp.sum(aux_vec * valid)
         return (out, aux_sum), out[-1]

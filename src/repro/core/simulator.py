@@ -294,7 +294,7 @@ def staged_from_model(model, partition=None
         raise ValueError(f"partition covers {partition.n_layers} layers, "
                          f"model has {model.cfg.n_layers}")
     sizes = (partition.sizes() if partition is not None
-             else (model.layers_per_stage,) * model.n_stages)
+             else tuple(model.stage_sizes))
 
     def repack(params):
         return {

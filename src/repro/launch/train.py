@@ -14,6 +14,12 @@ Example (the 8-deliverable end-to-end run):
 schedule (round schedules run through the IR interpreter, one flush
 round / 2BW group per step); ``--virtual-stages v`` gives each device v
 chunk-stages under ``--schedule interleaved``.  See docs/SCHEDULES.md.
+
+``--layers`` need not divide ``--pipe``: stage params are ragged
+per-stage trees (e.g. ``--layers 7 --pipe 3`` runs sizes (3,2,2) under
+the default partitioner, or whatever split ``--partitioner dp``
+computes), and checkpoints written by any partition restore onto any
+other via the flat layer order.
 """
 from __future__ import annotations
 

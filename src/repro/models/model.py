@@ -4,7 +4,7 @@ pipeline runtimes, KV-cache/state decode, and dry-run input specs.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,8 +30,61 @@ def tree_slice_range(tree, lo, hi):
     return jax.tree.map(lambda a: a[lo:hi], tree)
 
 
+def uniform_stage_sizes(n_layers: int, n_stages: int) -> Tuple[int, ...]:
+    """Equal-count contiguous split, remainder spread over early stages
+    (the same split :func:`repro.planner.partition.uniform` produces)."""
+    if n_stages < 1 or n_layers < n_stages:
+        raise ValueError(f"cannot split {n_layers} layers into "
+                         f"{n_stages} stages (a stage would be empty)")
+    base, rem = divmod(n_layers, n_stages)
+    return tuple(base + (1 if s < rem else 0) for s in range(n_stages))
+
+
+def flat_stage_layers(stages):
+    """Merge stage layer params to a flat [L, ...] tree.
+
+    Accepts the ragged canonical layout (tuple of per-stage trees,
+    concatenated in stage order) and the legacy stacked
+    ``[S, Lps, ...]`` dict layout (reshaped).  The single
+    flat-layer-order routine — `Model.flat_layers` and
+    `runtime/elastic` both delegate here."""
+    if isinstance(stages, (tuple, list)):
+        if len(stages) == 1:
+            return stages[0]["layers"]
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                            *[t["layers"] for t in stages])
+    return jax.tree.map(
+        lambda a: a.reshape((-1,) + a.shape[2:]), stages["layers"])
+
+
+def split_flat_stages(flat_stages, sizes) -> Tuple[Any, ...]:
+    """Flat ``{"layers": [L, ...](, "shared": [S, ...])}`` -> ragged
+    per-stage trees for ``sizes`` (the one slicing-by-sizes routine —
+    `Model.init`, `partition_stage_params` and `runtime/elastic` all
+    route through it)."""
+    out, lo = [], 0
+    for k, n in enumerate(sizes):
+        tree: Dict[str, Any] = {
+            "layers": tree_slice_range(flat_stages["layers"], lo, lo + n)}
+        if "shared" in flat_stages:
+            tree["shared"] = tree_slice(flat_stages["shared"], k)
+        out.append(tree)
+        lo += n
+    return tuple(out)
+
+
 class Model:
-    """Functional model wrapper for one ArchConfig."""
+    """Functional model wrapper for one ArchConfig.
+
+    Stage parameters use the **ragged per-stage canonical layout**:
+    ``params["stages"]`` is a tuple of ``n_stages`` pytrees whose
+    ``layers`` leaves are ``[L_k, ...]`` with ``L_k`` from
+    ``stage_sizes`` (the uniform split, remainder on early stages) —
+    any ``(n_layers, n_stages)`` initializes, no divisibility required.
+    The runtimes repartition these trees to a plan's sizes via
+    :meth:`partition_stage_params`, which also still accepts the legacy
+    stacked ``[S, Lps, ...]`` dict layout old checkpoints carry.
+    """
 
     def __init__(self, cfg: ArchConfig):
         self.cfg = cfg
@@ -39,15 +92,22 @@ class Model:
         pipelineable = (plan.pipe_role == "stage" and plan.pipe > 1
                         and not cfg.is_encdec)
         self.n_stages = plan.pipe if pipelineable else 1
-        if cfg.n_layers % self.n_stages:
-            raise ValueError(
-                f"{cfg.name}: {cfg.n_layers} layers not divisible by "
-                f"{self.n_stages} stages")
-        self.layers_per_stage = cfg.n_layers // self.n_stages
+        self.stage_sizes = uniform_stage_sizes(cfg.n_layers, self.n_stages)
         self.hybrid = (cfg.ssm is not None and cfg.ssm.shared_attn_every > 0)
 
+    @property
+    def layers_per_stage(self) -> int:
+        """Uniform per-stage layer count; only defined when the default
+        split is uniform (legacy accessor — prefer ``stage_sizes``)."""
+        if self.cfg.n_layers % self.n_stages:
+            raise ValueError(
+                f"{self.cfg.name}: {self.cfg.n_layers} layers over "
+                f"{self.n_stages} stages is ragged "
+                f"(sizes {self.stage_sizes}); use stage_sizes")
+        return self.cfg.n_layers // self.n_stages
+
     # ------------------------------------------------------------------ specs
-    def param_specs(self) -> Dict[str, Any]:
+    def _outer_specs(self) -> Dict[str, Any]:
         cfg = self.cfg
         outer: Dict[str, Any] = {
             "embed": embed_specs(cfg),
@@ -55,6 +115,15 @@ class Model:
         }
         if cfg.is_encdec:
             outer["ln_f_enc"] = norm_specs(cfg)
+        return outer
+
+    def param_specs(self) -> Dict[str, Any]:
+        """Specs in the canonical layout: ragged per-stage tuple for
+        pipelined stacks (``layers`` leaves ``[L_k, ...]``, one
+        ``shared`` block per stage for hybrid models)."""
+        cfg = self.cfg
+        outer = self._outer_specs()
+        if cfg.is_encdec:
             stages = {
                 "enc": stack_specs(block_specs(cfg), cfg.n_enc_layers, "layer"),
                 "dec": stack_specs(block_specs(cfg, cross=True),
@@ -62,16 +131,42 @@ class Model:
             }
             return {"outer": outer, "stages": stages}
         layer = block_specs(cfg)
-        st = stack_specs(stack_specs(layer, self.layers_per_stage, "layer"),
-                         self.n_stages, "stage")
-        stages: Dict[str, Any] = {"layers": st}
+        stages = []
+        for n in self.stage_sizes:
+            tree: Dict[str, Any] = {"layers": stack_specs(layer, n, "layer")}
+            if self.hybrid:
+                tree["shared"] = shared_block_specs(cfg)
+            stages.append(tree)
+        return {"outer": outer, "stages": tuple(stages)}
+
+    def _flat_param_specs(self) -> Dict[str, Any]:
+        """Spec tree used for initialization: all layers in one
+        ``[n_layers, ...]`` stack (hybrid shared blocks ``[S, ...]``).
+
+        This is RNG-compatible with the pre-ragged stacked layout — a
+        ``[S, Lps, ...]`` and an ``[L, ...]`` draw of the same spec leaf
+        consume the same key and produce the same bits in layer order —
+        so ragged canonical init stays bit-identical to historical
+        (golden-pinned) initializations wherever the split is uniform.
+        """
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return self.param_specs()
+        stages: Dict[str, Any] = {
+            "layers": stack_specs(block_specs(cfg), cfg.n_layers, "layer")}
         if self.hybrid:
             stages["shared"] = stack_specs(shared_block_specs(cfg),
                                            self.n_stages, "stage")
-        return {"outer": outer, "stages": stages}
+        return {"outer": self._outer_specs(), "stages": stages}
 
     def init(self, key):
-        return init_params(self.param_specs(), key, self.cfg.param_dtype)
+        params = init_params(self._flat_param_specs(), key,
+                             self.cfg.param_dtype)
+        if self.cfg.is_encdec:
+            return params
+        return {"outer": params["outer"],
+                "stages": split_flat_stages(params["stages"],
+                                            self.stage_sizes)}
 
     def param_sds(self):
         return specs_to_sds(self.param_specs(), self.cfg.param_dtype)
@@ -239,20 +334,30 @@ class Model:
 
     # ------------------------------------------------------------------ decode
     def flat_layers(self, stages):
-        """Merge [S, Lps, ...] stacked layer params to [L, ...]."""
-        return jax.tree.map(
-            lambda a: a.reshape((-1,) + a.shape[2:]), stages["layers"])
+        """See :func:`flat_stage_layers` (ragged or legacy stacked)."""
+        return flat_stage_layers(stages)
+
+    @staticmethod
+    def _stage_shared(stages, k):
+        """Stage k's tied shared block in either layout (None if absent)."""
+        if isinstance(stages, (tuple, list)):
+            return stages[k].get("shared")
+        if "shared" in stages:
+            return tree_slice(stages["shared"], k)
+        return None
 
     # --------------------------------------------------------- ragged stages
     def partition_stage_params(self, stages, sizes, *, n_chunks=None):
-        """Regroup canonical stacked stage params into per-stage trees.
+        """Regroup stage params into per-stage trees for ``sizes``.
 
-        ``stages`` is the init/checkpoint layout (leaves [S, Lps, ...]);
-        ``sizes`` is a per-stage layer-count vector (a planner
+        ``stages`` is either the ragged canonical tuple (any partition)
+        or the legacy stacked layout (leaves [S, Lps, ...]); ``sizes``
+        is a per-stage layer-count vector (a planner
         ``Partition.sizes()``), summing to ``cfg.n_layers``.  Returns a
         tuple of ``len(sizes)`` stage trees whose ``layers`` leaves are
         [sizes[k], ...] — the ragged layout the streaming runtime
-        executes, realizing non-uniform (DP) plans.
+        executes, realizing non-uniform (DP) plans.  A ragged input
+        whose sizes already match is returned as-is.
 
         ``n_chunks``: expected tree count when it is not the model's
         device-stage count — interleaved/virtual-stage plans split the
@@ -264,6 +369,9 @@ class Model:
         so virtual stages are refused for hybrid models.
         """
         want = n_chunks if n_chunks is not None else self.n_stages
+        ragged_in = isinstance(stages, (tuple, list))
+        has_shared = ("shared" in stages[0]) if ragged_in else \
+            ("shared" in stages)
         if sum(sizes) != self.cfg.n_layers:
             raise ValueError(f"partition sizes {tuple(sizes)} do not cover "
                              f"{self.cfg.n_layers} layers")
@@ -273,7 +381,7 @@ class Model:
         if n_chunks is not None and n_chunks % self.n_stages:
             raise ValueError(f"{n_chunks} chunks do not fold onto "
                              f"{self.n_stages} devices")
-        if want > self.n_stages and "shared" in stages:
+        if want > self.n_stages and has_shared:
             raise ValueError(
                 f"virtual stages ({want} chunks on {self.n_stages} "
                 f"devices) are unsupported for hybrid models: the "
@@ -281,16 +389,25 @@ class Model:
                 f"chunks and independent chunk updates would fork it")
         if min(sizes) < 1:
             raise ValueError(f"empty stage in partition sizes {tuple(sizes)}")
-        flat = self.flat_layers(stages)
-        out, lo = [], 0
-        for k, n in enumerate(sizes):
-            tree: Dict[str, Any] = {
-                "layers": tree_slice_range(flat, lo, lo + n)}
-            if "shared" in stages:
-                tree["shared"] = tree_slice(stages["shared"], k)
-            out.append(tree)
-            lo += n
-        return tuple(out)
+        if ragged_in and has_shared and len(stages) != want:
+            raise ValueError(
+                f"cannot repartition {len(stages)} hybrid stage trees "
+                f"into {want}: shared blocks are tied per stage")
+        if ragged_in:
+            got = tuple(jax.tree.leaves(t["layers"])[0].shape[0]
+                        for t in stages)
+            if got == tuple(sizes):
+                return tuple(stages)
+        out = split_flat_stages({"layers": self.flat_layers(stages)}, sizes)
+        if has_shared:
+            # shared blocks stay with their stage index (tied per
+            # stage, no flat layer order): ragged input passes trees
+            # through, stacked input slices the [S, ...] stack
+            out = tuple(
+                {**t, "shared": (stages[k]["shared"] if ragged_in
+                                 else tree_slice(stages["shared"], k))}
+                for k, t in enumerate(out))
+        return out
 
     def device_chunk_params(self, chunk_trees, n_devices=None):
         """Group chunk-stage trees by hosting device.
@@ -329,27 +446,23 @@ class Model:
 
     def ragged_stage_axes(self, n_stages: int):
         """Logical-axis pytree matching :meth:`partition_stage_params`
-        output: the stacked axes with the leading 'stage' dim dropped
-        ('layer' keeps naming each stage tree's leading dim).
-
-        Dropping 'stage' means ragged stage weights are *replicated*
-        over the pipe mesh axis rather than placed stage-k-on-device-k
-        as the stacked [S, ...] leaves were: per-stage placement of
-        differently-shaped trees is MPMD, which a PartitionSpec on a
-        (now nonexistent) leading axis cannot express — see the ROADMAP
-        follow-up on explicit per-stage device placement."""
-        ax = self.param_axes()["stages"]
-        is_axes = lambda x: isinstance(x, tuple) and all(
-            isinstance(a, (str, type(None))) for a in x)
-        one: Dict[str, Any] = {
-            "layers": jax.tree.map(lambda a: a[1:], ax["layers"],
-                                   is_leaf=is_axes)}
-        if "shared" in ax:
-            one["shared"] = jax.tree.map(lambda a: a[1:], ax["shared"],
-                                         is_leaf=is_axes)
+        output: one per-stage axes tree repeated ``n_stages`` times
+        ('layer' names each stage tree's leading dim; there is no
+        'stage' axis — placement of the differently-shaped stage trees
+        is per-stage/MPMD, expressed by
+        ``runtime.sharding.stage_placement_shardings`` rather than a
+        PartitionSpec)."""
+        one = self.param_axes()["stages"][0]
         return tuple(one for _ in range(n_stages))
 
-    def init_cache(self, batch: int, max_seq: int):
+    def init_cache(self, batch: int, max_seq: int, *,
+                   stage_sizes: Optional[Sequence[int]] = None):
+        """``stage_sizes``: the partition of the params that will be
+        decoded (defaults to the model's canonical split).  Only hybrid
+        models depend on it — their shared-attention cache has one slot
+        per *full* ``shared_attn_every`` segment of each stage, so a
+        plan-partitioned hybrid tree needs a cache built for the same
+        partition."""
         cfg = self.cfg
         dt = jnp.dtype(cfg.compute_dtype)
         L = cfg.n_layers
@@ -373,8 +486,16 @@ class Model:
                 lambda a: jnp.broadcast_to(a, (L,) + a.shape), one)}
             if self.hybrid:
                 kv = attn_mod.gqa_init_cache(cfg, batch, max_seq, dt)
-                n_shared = self.n_stages * max(
-                    1, self.layers_per_stage // cfg.ssm.shared_attn_every)
+                # exactly the slots decode consumes: stage_apply /
+                # _decode_hybrid apply a stage's shared block once per
+                # *full* k-layer segment, i.e. floor(L_s / k) times (a
+                # stage shorter than k never applies it); keep >= 1
+                # slot so the cache tree stays constructible — decode
+                # then returns it untouched
+                sizes = (self.stage_sizes if stage_sizes is None
+                         else tuple(stage_sizes))
+                n_shared = max(1, sum(
+                    n // cfg.ssm.shared_attn_every for n in sizes))
                 cache["shared"] = jax.tree.map(
                     lambda a: jnp.broadcast_to(a, (n_shared,) + a.shape), kv)
             return cache
@@ -418,20 +539,31 @@ class Model:
             body, x, (self.flat_layers(stages), cache["layers"]))
         return self.logits(outer, x), {"layers": new_cache}
 
+    def stage_sizes_of(self, stages) -> Tuple[int, ...]:
+        """The per-stage layer counts a stage-param tree actually
+        carries (the model's default for the legacy stacked layout)."""
+        if isinstance(stages, (tuple, list)):
+            return tuple(jax.tree.leaves(t["layers"])[0].shape[0]
+                         for t in stages)
+        return tuple(self.stage_sizes)
+
     def _decode_hybrid(self, params, cache, x, pos):
         cfg = self.cfg
         outer, stages = params["outer"], params["stages"]
         k = cfg.ssm.shared_attn_every
-        Lps, S = self.layers_per_stage, self.n_stages
         flat = self.flat_layers(stages)
-        n_shared_per_stage = max(1, Lps // k)
         new_ssm, new_shared = [], []
         shared_idx = 0
-        for s in range(S):
-            lo_g = s * Lps
+        lo_g = 0
+        # segment by the tree's ACTUAL partition, exactly like
+        # stage_apply does in training — a plan-partitioned hybrid tree
+        # must decode with the same shared-block positions it trained
+        # with (the cache must be built for the same partition; see
+        # init_cache's stage_sizes parameter)
+        for s, L_s in enumerate(self.stage_sizes_of(stages)):
             lo = 0
-            while lo < Lps:
-                hi = min(lo + k, Lps)
+            while lo < L_s:
+                hi = min(lo + k, L_s)
 
                 def body(x, inp):
                     lp, st = inp
@@ -441,14 +573,15 @@ class Model:
                        tree_slice_range(cache["layers"], lo_g + lo, lo_g + hi))
                 x, st = jax.lax.scan(body, x, seg)
                 new_ssm.append(st)
-                if hi < Lps or lo + k == Lps:
+                if hi < L_s or lo + k == L_s:
                     sc = tree_slice(cache["shared"], shared_idx)
                     x, nc = shared_block_apply(
-                        cfg, tree_slice(stages["shared"], s), x, pos=pos,
+                        cfg, self._stage_shared(stages, s), x, pos=pos,
                         cache=sc)
                     new_shared.append(nc)
                     shared_idx += 1
                 lo = hi
+            lo_g += L_s
         cat = lambda *ts: jnp.concatenate(ts, 0)
         new_cache = {
             "layers": jax.tree.map(cat, *new_ssm),

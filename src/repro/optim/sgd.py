@@ -41,9 +41,70 @@ def update(params, state: MomentumState, grads, *, lr, gamma: float = 0.9
     return new_p, MomentumState(new_v)
 
 
+def _canonical_sumsq(tree) -> jnp.ndarray:
+    """Layout-canonical sum of squares over a gradient/param tree.
+
+    The ragged per-stage canonical layout and the legacy stacked
+    ``[S, Lps, ...]`` layout group the *same* layer parameters into
+    differently-shaped leaves, so a naive per-leaf-then-python-sum
+    reduction associates the additions differently and the two layouts
+    drift bitwise — the one layout-sensitive numeric in the codebase.
+
+    Canonical order: every leaf is reduced to per-layer-granularity
+    float32 partials (ragged stage leaves ``[L_k, ...]`` per leading
+    index; stacked ``stages`` leaves per ``(stage, layer)`` pair, which
+    is the identical partial multiset in the identical stage-major
+    order; other leaves whole), partial vectors are grouped by their
+    tree path with sequence indices stripped (so stage k and stage j of
+    one parameter share a group, ordered by stage), groups are sorted
+    by path, and ONE reduction runs over the concatenated vector.  Any
+    stage grouping of the same layers therefore reduces the exact same
+    vector in the exact same order."""
+    from jax.tree_util import SequenceKey, tree_flatten_with_path
+    groups: dict = {}
+    for path, leaf in tree_flatten_with_path(tree)[0]:
+        names, idxs, in_seq = [], [], False
+        for p in path:
+            if isinstance(p, SequenceKey):
+                in_seq = True
+                idxs.append(p.idx)
+            else:
+                names.append(str(getattr(p, "key", p)))
+        x = jnp.square(jnp.asarray(leaf).astype(jnp.float32))
+        if x.ndim == 0:
+            part = x[None]
+        elif in_seq:
+            # ragged stage tree leaf [L_k, ...]: per-layer partials
+            part = jnp.sum(x.reshape((x.shape[0], -1)), axis=1)
+        elif "stages" in names and x.ndim >= 2:
+            # legacy stacked [S, Lps, ...]: per-(stage, layer) partials,
+            # stage-major == the ragged per-stage concatenation order
+            part = jnp.sum(x.reshape((x.shape[0] * x.shape[1], -1)), axis=1)
+        else:
+            part = jnp.sum(x)[None]
+        groups.setdefault("/".join(names), []).append((tuple(idxs), part))
+    vecs = [part
+            for key in sorted(groups)
+            for _, part in sorted(groups[key], key=lambda kv: kv[0])]
+    if not vecs:
+        return jnp.zeros(())
+    # sequential accumulation via scan: XLA cannot reassociate it, so
+    # the canonical order survives jit.  A fused jnp.sum over the
+    # concatenation does NOT suffice even though the concatenated
+    # vector is identical across layouts: XLA fissions concat+reduce
+    # into per-operand partial reductions, and the operand structure
+    # (one [L] vector vs S smaller ones) differs per layout — measured
+    # as a bitwise mismatch under jit before this scan was introduced.
+    total, _ = jax.lax.scan(lambda c, x: (c + x, None), jnp.zeros(()),
+                            jnp.concatenate(vecs))
+    return total
+
+
 def global_norm(tree) -> jnp.ndarray:
-    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
-                        for x in jax.tree.leaves(tree)))
+    """Canonical-order global L2 norm: bitwise layout-independent
+    between the ragged per-stage and stacked stage-param layouts (see
+    :func:`_canonical_sumsq`)."""
+    return jnp.sqrt(_canonical_sumsq(tree))
 
 
 def clip_by_global_norm(grads, max_norm: float):

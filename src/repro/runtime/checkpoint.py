@@ -6,6 +6,21 @@ directory either exists fully or not at all, so a crash mid-write can
 never corrupt the restore path (restart just picks the previous step).
 Saving is double-buffered: the host snapshot (device→np) happens on the
 step path, the file write on a background thread.
+
+Checkpoints are keyed by tree path, so they follow whatever layout the
+state carries — today the ragged per-stage canonical layout
+(``…/stages/<k>/layers/…``).  Two bit-exact migrations run at restore:
+
+* **stacked → ragged**: a pre-ragged checkpoint (stage weights stacked
+  ``[S, Lps, ...]`` under ``…/stages/layers/…``) serves the missing
+  per-stage key by slicing stage ``k`` off the leading axis;
+* **partition → partition**: a checkpoint written under different
+  stage sizes (or stage count) serves a mismatched layer-stack key by
+  concatenating its per-stage arrays to the flat ``[L, ...]`` order
+  and re-slicing the template's range — a DP-partition run restores
+  onto a uniform one and vice versa.  In-flight rings (``w_stash``)
+  and per-stage ``shared`` blocks have no flat layer order and raise
+  instead of restoring wrong.
 """
 from __future__ import annotations
 
@@ -86,12 +101,88 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+# `<prefix>/stages/<k>/<rest>` (ragged canonical) whose stacked
+# pre-ragged spelling is `<prefix>/stages/<rest>`; also covers the
+# pipedream weight ring (`w_stash/<k>/…` ← stacked `w_stash/…`,
+# stage-first in both layouts)
+_RAGGED_KEY_RE = re.compile(r"^(.*/|)(stages|w_stash)/(\d+)/(.+)$")
+
+
+def _migrate_stacked_leaf(key: str, data, want_shape) -> Optional[np.ndarray]:
+    """Bit-exact shim: serve a ragged per-stage key from a pre-ragged
+    stacked checkpoint.  Stage ``k``'s tree is slice ``k`` of the
+    stacked leaf's leading (stage) axis; returns None when the key is
+    not a ragged stage key or the stacked spelling is absent."""
+    m = _RAGGED_KEY_RE.match(key)
+    if m is None:
+        return None
+    old_key = f"{m.group(1)}{m.group(2)}/{m.group(4)}"
+    if old_key not in data.files:
+        return None
+    stacked = data[old_key]
+    k = int(m.group(3))
+    if k >= stacked.shape[0]:
+        raise ValueError(
+            f"stacked checkpoint leaf {old_key!r} has {stacked.shape[0]} "
+            f"stages; cannot serve stage {k} for {key!r}")
+    arr = stacked[k]
+    if tuple(arr.shape) != tuple(want_shape):
+        raise ValueError(
+            f"stacked checkpoint leaf {old_key!r} stage {k} has shape "
+            f"{arr.shape}, template wants {tuple(want_shape)} — the "
+            f"migration shim only covers uniform pre-ragged layouts")
+    return arr
+
+
+def _template_group_sizes(flat_with_path) -> dict:
+    """{(prefix, rest): {stage index: leading dim}} over the template's
+    ragged stage *layer* leaves — the per-group partition the template
+    wants, used to repartition a checkpoint written under different
+    stage sizes."""
+    groups: dict = {}
+    for path, leaf in flat_with_path:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        m = _RAGGED_KEY_RE.match(key)
+        if m is None or m.group(2) != "stages" or \
+                not m.group(4).startswith("layers" + _SEP):
+            continue
+        shape = getattr(leaf, "shape", np.shape(leaf))
+        groups.setdefault((m.group(1), m.group(4)),
+                          {})[int(m.group(3))] = int(shape[0])
+    return groups
+
+
+def _repartition_slice(flat: np.ndarray, sizes: dict, k: int, want_shape,
+                       key: str) -> np.ndarray:
+    """Serve stage ``k``'s slice of a group's flat ``[L, ...]`` layer
+    stack under the template partition ``sizes`` — bit-exact, since
+    every partition is a view of the same flat layer order.
+
+    Only layer stacks repartition (leading axis = layer); per-stage
+    ``shared`` blocks and the in-flight ``w_stash`` ring have no flat
+    layer order and must match shapes directly."""
+    total = sum(sizes[i] for i in sorted(sizes))
+    if flat.shape[0] != total:
+        raise ValueError(
+            f"checkpoint covers {flat.shape[0]} layers for the group of "
+            f"{key!r}, template wants {total}")
+    lo = sum(sizes[i] for i in sorted(sizes) if i < k)
+    arr = flat[lo:lo + sizes[k]]
+    if tuple(arr.shape) != tuple(want_shape):
+        raise ValueError(
+            f"repartitioned leaf for {key!r} has shape {arr.shape}, "
+            f"template wants {tuple(want_shape)}")
+    return arr
+
+
 def restore(ckpt_dir: str, template: Any, *, step: Optional[int] = None,
             shardings: Any = None) -> Tuple[Any, int]:
     """Restore onto ``template``'s pytree structure.  If ``shardings`` is
     given (a matching pytree of NamedShardings), leaves are device_put with
     them — this is the elastic-resharding path: the checkpoint written on
-    one mesh restores onto any other."""
+    one mesh restores onto any other.  Pre-ragged stacked checkpoints
+    migrate bit-exactly onto ragged templates (see module docstring)."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -99,13 +190,73 @@ def restore(ckpt_dir: str, template: Any, *, step: Optional[int] = None,
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     data = np.load(os.path.join(d, "shard_0.npz"))
     flat = jax.tree_util.tree_flatten_with_path(template)
+    group_sizes = _template_group_sizes(flat[0])
+    group_cache: dict = {}
+
+    def ckpt_group(prefix, rest):
+        """(per-stage layer counts, flat [L, ...] concat) of one leaf
+        group as the checkpoint stores it — one decompress+concat pass
+        per group, shared by every template leaf that repartitions
+        (vec is empty / flat is None when the checkpoint has no ragged
+        keys for the group)."""
+        g = (prefix, rest)
+        if g not in group_cache:
+            parts = []
+            j = 0
+            while f"{prefix}stages/{j}/{rest}" in data.files:
+                parts.append(data[f"{prefix}stages/{j}/{rest}"])
+                j += 1
+            if not parts and f"{prefix}stages/{rest}" in data.files:
+                # pre-ragged stacked spelling: [S, Lps, ...] is the
+                # same flat layer order, so it repartitions onto any
+                # template sizes too (uniform templates keep taking
+                # the cheaper per-stage slice via the stacked shim)
+                stacked = data[f"{prefix}stages/{rest}"]
+                group_cache[g] = (
+                    (int(stacked.shape[1]),) * int(stacked.shape[0]),
+                    stacked.reshape((-1,) + stacked.shape[2:]))
+            else:
+                group_cache[g] = (
+                    tuple(int(p.shape[0]) for p in parts),
+                    np.concatenate(parts, axis=0) if parts else None)
+        return group_cache[g]
+
     leaves = []
     shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
                   if shardings is not None else None)
     for i, (path, leaf) in enumerate(flat[0]):
         key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
                         for p in path)
-        arr = data[key]
+        want = tuple(getattr(leaf, "shape", np.shape(leaf)))
+        arr = None
+        m = _RAGGED_KEY_RE.match(key)
+        if m is not None and m.group(2) == "stages" and \
+                m.group(4).startswith("layers" + _SEP):
+            # repartitioning is a *group* decision: compare the full
+            # stage-size vectors, never per-leaf shapes — a stage whose
+            # layer count coincides between two different partitions
+            # still covers different flat layers
+            grp = group_sizes.get((m.group(1), m.group(4)), {})
+            tmpl_vec = tuple(grp[j] for j in sorted(grp))
+            c_vec, c_flat = ckpt_group(m.group(1), m.group(4))
+            if c_vec and c_vec != tmpl_vec:
+                arr = _repartition_slice(c_flat, grp, int(m.group(3)),
+                                         want, key)
+        if arr is None and key in data.files:
+            arr = data[key]
+            if tuple(arr.shape) != want:
+                raise ValueError(
+                    f"checkpoint leaf {key!r} has shape "
+                    f"{tuple(arr.shape)}, template wants {want} — not a "
+                    f"stage layer stack that can be repartitioned "
+                    f"(in-flight rings and shared blocks do not cross "
+                    f"partitions; re-init them instead)")
+        if arr is None:
+            arr = _migrate_stacked_leaf(key, data, want)
+        if arr is None:
+            raise KeyError(
+                f"checkpoint {d} has no leaf {key!r} (and no stacked "
+                f"or differently-partitioned spelling to migrate from)")
         if hasattr(leaf, "dtype"):
             arr = arr.astype(leaf.dtype)
         if shard_flat is not None:

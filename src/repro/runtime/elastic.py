@@ -1,22 +1,32 @@
 """Elastic scaling: reshard a training state across mesh plans.
 
 Grow/shrink the data axis, or re-factor the model axis into a different
-(pipe, tensor) split: stage-stacked parameters [S, L/S, ...] are restacked
-to [S', L/S', ...] (same flattened layer order), optimizer state follows,
-and in-flight pipeline rings are re-initialized (the ≤2(S−1) in-flight
+(pipe, tensor) split: the flattened layer order is preserved while the
+stage weights are repartitioned into the new topology's ragged
+per-stage trees (any layer count over any stage count — the only hard
+error is a stage that would be empty), optimizer state follows, and
+in-flight pipeline rings are re-initialized (the ≤2(S−1) in-flight
 microbatches are dropped — an elastic event costs one pipeline refill,
 which is the industry-standard trade).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.models.model import (flat_stage_layers, split_flat_stages,
+                                uniform_stage_sizes)
+
 
 def restack_stages(stages: Any, new_pipe: int) -> Any:
-    """[S, Lps, ...] -> [S', L/S', ...] preserving flat layer order."""
+    """[S, Lps, ...] -> [S', L/S', ...] preserving flat layer order.
+
+    Legacy stacked-layout helper (checkpoint migration / tests); the
+    live elastic path repartitions into ragged trees via
+    :func:`reshard_params` instead and has no divisibility constraint.
+    """
     def leaf(a):
         total = a.shape[0] * a.shape[1]
         if total % new_pipe:
@@ -24,16 +34,6 @@ def restack_stages(stages: Any, new_pipe: int) -> Any:
         return a.reshape((new_pipe, total // new_pipe) + a.shape[2:])
 
     return jax.tree.map(leaf, stages)
-
-
-def _flat_layers(stages: Any) -> Any:
-    """[L, ...] flat layer tree from stacked stage params or the
-    streaming runtime's ragged per-stage trees."""
-    if isinstance(stages, (tuple, list)):
-        return jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
-                            *[t["layers"] for t in stages])
-    return jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]),
-                        stages["layers"])
 
 
 def _shared_blocks(stages: Any) -> Optional[Any]:
@@ -46,35 +46,40 @@ def _shared_blocks(stages: Any) -> Optional[Any]:
 
 
 def reshard_params(params: Dict[str, Any], *, new_pipe: int,
+                   sizes: Optional[Sequence[int]] = None,
                    old_pipe: Optional[int] = None) -> Dict[str, Any]:
-    """Re-factor stage params (stacked or ragged) to the canonical
-    stacked layout for ``new_pipe`` stages, preserving flat layer
-    order.  Stage layouts without a layer stack (e.g. enc-dec
-    ``{"enc", "dec"}``) pass through untouched, as do any extra stage
-    keys."""
+    """Repartition stage params (ragged or legacy stacked) into the
+    ragged canonical trees for a new topology, preserving flat layer
+    order.
+
+    ``sizes``: per-stage layer counts for the new split (a planner
+    ``Partition.sizes()``); defaults to the uniform split with the
+    remainder on early stages.  The only hard error is an empty stage
+    (more stages than layers) — no divisibility requirement.  Stage
+    layouts without a layer stack (e.g. enc-dec ``{"enc", "dec"}``)
+    pass through untouched, as do any extra param keys."""
+    del old_pipe  # layer order is recovered from the trees themselves
     out = dict(params)
     raw = params["stages"]
     if not isinstance(raw, (tuple, list)) and "layers" not in raw:
         out["stages"] = dict(raw)
         return out
-    flat = _flat_layers(raw)
-
-    def leaf(a):
-        if a.shape[0] % new_pipe:
-            raise ValueError(
-                f"{a.shape[0]} layers not divisible by {new_pipe}")
-        return a.reshape((new_pipe, a.shape[0] // new_pipe) + a.shape[1:])
-
-    stages: Dict[str, Any] = (dict(raw) if isinstance(raw, dict) else {})
-    stages["layers"] = jax.tree.map(leaf, flat)
+    flat_stages: Dict[str, Any] = {"layers": flat_stage_layers(raw)}
+    L = jax.tree.leaves(flat_stages["layers"])[0].shape[0]
+    if sizes is None:
+        sizes = uniform_stage_sizes(L, new_pipe)
+    sizes = tuple(int(n) for n in sizes)
+    if sum(sizes) != L or min(sizes) < 1:
+        raise ValueError(f"sizes {sizes} do not tile {L} layers "
+                         f"(empty stages are not executable)")
     # per-stage shared blocks (zamba2) replicate/slice to the new count
-    shared = _shared_blocks(params["stages"])
+    shared = _shared_blocks(raw)
     if shared is not None:
         def sleaf(a):
-            reps = (new_pipe + a.shape[0] - 1) // a.shape[0]
-            return jnp.tile(a, (reps,) + (1,) * (a.ndim - 1))[:new_pipe]
-        stages["shared"] = jax.tree.map(sleaf, shared)
-    out["stages"] = stages
+            r = (len(sizes) + a.shape[0] - 1) // a.shape[0]
+            return jnp.tile(a, (r,) + (1,) * (a.ndim - 1))[:len(sizes)]
+        flat_stages["shared"] = jax.tree.map(sleaf, shared)
+    out["stages"] = split_flat_stages(flat_stages, sizes)
     return out
 
 
@@ -91,37 +96,35 @@ def elastic_restate(model_old, model_new, state: Dict[str, Any],
     ``n_chunks`` chunk trees — an elastic event can therefore also move
     a job between schedule families, at the usual cost of dropping the
     in-flight microbatches (and, for 2BW, restarting the double buffer
-    from the carried weights)."""
+    from the carried weights).  Without a plan the new model's default
+    (uniform, remainder-first) partition is used — ragged layer counts
+    restate fine; the only hard error is a stage that would be empty.
+    """
     from repro.core import pipeline_stream
-    params = reshard_params(state["params"],
-                            new_pipe=model_new.n_stages,
-                            old_pipe=model_old.n_stages)
     ir_plan = plan is not None and \
         plan.schedule in pipeline_stream.IR_SCHEDULES
+    if plan is not None:
+        sizes: Any = plan.partition.sizes()
+    else:
+        sizes = model_new.stage_sizes
+    params = reshard_params(state["params"], new_pipe=model_new.n_stages,
+                            sizes=sizes)
     if ir_plan:
         new_state = pipeline_stream.make_ir_state(
             model_new, params, batch_sds, plan=plan, mode=mode)
-        sizes = plan.partition.sizes()
-        n_chunks: Any = plan.n_chunks
     else:
         new_state = pipeline_stream.make_state(
             model_new, params, batch_sds, mode=mode,
             ticks_per_step=ticks_per_step, plan=plan)
-        sizes = (plan.partition.sizes() if plan is not None
-                 else (model_new.layers_per_stage,) * model_new.n_stages)
-        n_chunks = None
-    # momentum carries over (same restack), so prediction stays warm;
+    # momentum carries over (same repartition), so prediction stays warm;
     # mirror the layout the state constructor chose for the new params
-    # (ragged per-(chunk-)stage trees when model_new pipelines, stacked
-    # otherwise)
-    mom_stacked = reshard_params(
+    # (ragged per-(chunk-)stage trees when model_new pipelines)
+    mom_stages = reshard_params(
         {"stages": state["momentum"]["stages"]},
-        new_pipe=model_new.n_stages)["stages"]
-    if isinstance(new_state["params"]["stages"], (tuple, list)):
-        mom_stages: Any = model_new.partition_stage_params(
-            mom_stacked, sizes, n_chunks=n_chunks)
-    else:
-        mom_stages = mom_stacked
+        new_pipe=model_new.n_stages, sizes=sizes)["stages"]
+    if not isinstance(new_state["params"]["stages"], (tuple, list)):
+        # non-pipelined stage layouts (enc-dec) pass through unchanged
+        mom_stages = state["momentum"]["stages"]
     new_state["momentum"] = {"outer": state["momentum"]["outer"],
                              "stages": mom_stages}
     if "stash" in new_state:

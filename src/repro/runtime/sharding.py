@@ -126,28 +126,84 @@ def momentum_rules(cfg: ArchConfig, rules: Dict[str, AxisVal],
 # --no-ring-tp flips this (replicate rings: more memory, fewer gathers)
 _RING_TP = True
 
+_is_axes = lambda x: isinstance(x, tuple) and all(
+    isinstance(a, (str, type(None))) for a in x)
 
-def stream_state_shardings(model, state_sds: Dict[str, Any], mesh: Mesh,
-                           rules: Dict[str, AxisVal], *, zero1: bool = True):
-    """NamedShardings for the streaming (or sync / IR-interpreter) state.
 
-    Handles both the canonical stacked param layout (sync pipeline /
-    single stage) and the ragged per-stage trees of the streaming and
-    IR-interpreter runtimes — detected off the state's ``stages`` entry
-    being a tuple/list, whose matching axes tree drops the leading
-    'stage' dim per leaf.  Virtual-stage states simply carry more chunk
-    trees (``n_chunks = S·v``); like all ragged trees they replicate
-    over ``pipe`` until explicit per-stage placement lands (ROADMAP)."""
+def stage_submeshes(mesh: Mesh, n_stages: int):
+    """Per-pipe-coordinate sub-meshes, or None when the mesh cannot be
+    split that way (no ``pipe`` axis, or its size != ``n_stages``).
+
+    Sub-mesh ``k`` holds every device at pipe index ``k`` and keeps the
+    remaining mesh axes, so within one stage the usual data/tensor
+    sharding rules still apply — only the ``pipe`` axis is consumed by
+    *placement* instead of a PartitionSpec."""
+    names = mesh.axis_names
+    if "pipe" not in names:
+        return None
+    axis = names.index("pipe")
+    if mesh.devices.shape[axis] != n_stages:
+        return None
+    sub_names = tuple(n for n in names if n != "pipe")
+    subs = []
+    for k in range(n_stages):
+        devs = np.take(mesh.devices, k, axis=axis)
+        if not sub_names:       # pure-pipe mesh: one device per stage
+            subs.append(Mesh(devs.reshape(1), ("_stage_local",)))
+        else:
+            subs.append(Mesh(devs, sub_names))
+    return subs
+
+
+def _stage_tree_shardings(model, stages_sds, mesh_of, rules,
+                          *, lead_axes=()):
+    """Shardings for a tuple of ragged (chunk-)stage trees.
+
+    ``mesh_of(i)`` picks the mesh for tree ``i`` (the full mesh for
+    SPMD replication, or stage ``i % S``'s sub-mesh for explicit
+    placement); ``lead_axes`` prefixes every leaf's logical axes (the
+    pipedream weight ring adds a leading ring dim)."""
+    n = len(stages_sds)
+    stage_axes = model.ragged_stage_axes(n)
+    out = []
+    for i in range(n):
+        mesh_i = mesh_of(i)
+        sizes_i = axis_sizes(mesh_i)
+
+        def leaf(axes, sds):
+            spec = spec_for_leaf(tuple(lead_axes) + tuple(axes), sds.shape,
+                                 rules, sizes_i)
+            return NamedSharding(mesh_i, spec)
+
+        out.append(jax.tree.map(leaf, stage_axes[i], stages_sds[i],
+                                is_leaf=_is_axes))
+    return type(stages_sds)(out)
+
+
+def _state_shardings(model, state_sds: Dict[str, Any], mesh: Mesh,
+                     rules: Dict[str, AxisVal], *, zero1: bool,
+                     stage_mesh_of=None):
     sizes = axis_sizes(mesh)
     param_axes = model.param_axes()
     p_sds = state_sds.get("params", {})
     ragged = isinstance(p_sds.get("stages") if isinstance(p_sds, dict)
                         else None, (tuple, list))
-    if ragged:
-        stage_axes = model.ragged_stage_axes(len(p_sds["stages"]))
-        # match the state's container type so tree structures zip
-        param_axes = {"outer": param_axes["outer"],
-                      "stages": type(p_sds["stages"])(stage_axes)}
+    mesh_of = stage_mesh_of or (lambda i: mesh)
+    mom_rules = momentum_rules(None, rules, mesh) if zero1 else rules
+
+    def params_like(sds_tree, r):
+        """Shardings for a {"outer", "stages"} tree (params, momentum,
+        pred, 2BW stash): ragged stage trees route through the
+        per-stage builder, everything else through the rule table."""
+        if not ragged:
+            return shardings_for(param_axes, sds_tree, mesh, r)
+        return {
+            "outer": shardings_for(param_axes["outer"], sds_tree["outer"],
+                                   mesh, r),
+            "stages": _stage_tree_shardings(model, sds_tree["stages"],
+                                            mesh_of, r),
+        }
+
     act_rules = dict(rules)
     act_rules["act_embed"] = "tensor" if _RING_TP else None
     rep = NamedSharding(mesh, P())
@@ -156,21 +212,17 @@ def stream_state_shardings(model, state_sds: Dict[str, Any], mesh: Mesh,
         return NamedSharding(mesh, spec_for_leaf(axes, sds.shape, r, sizes))
 
     out: Dict[str, Any] = {
-        "params": shardings_for(param_axes, state_sds["params"], mesh, rules),
-        "momentum": shardings_for(
-            param_axes, state_sds["momentum"], mesh,
-            momentum_rules(None, rules, mesh) if zero1 else rules),
+        "params": params_like(state_sds["params"], rules),
+        "momentum": params_like(state_sds["momentum"], mom_rules),
         "step": rep,
     }
     if "stash" in state_sds:
         # IR-interpreter 2BW double buffer: previous weight/momentum
         # version, mirroring the live trees' placement leaf-for-leaf
         out["stash"] = {
-            "params": shardings_for(param_axes, state_sds["stash"]["params"],
-                                    mesh, rules),
-            "momentum": shardings_for(
-                param_axes, state_sds["stash"]["momentum"], mesh,
-                momentum_rules(None, rules, mesh) if zero1 else rules),
+            "params": params_like(state_sds["stash"]["params"], rules),
+            "momentum": params_like(state_sds["stash"]["momentum"],
+                                    mom_rules),
         }
     ring_axes = {
         "fwd_buf": ("stage", "act_batch", None, "act_embed"),
@@ -183,10 +235,16 @@ def stream_state_shardings(model, state_sds: Dict[str, Any], mesh: Mesh,
     if "tick" in state_sds:
         out["tick"] = rep
     if "pred" in state_sds:
+        if not ragged:
+            raise ValueError(
+                "fused-predict states carry ragged stage trees; a "
+                "stacked 'pred' layout predates the ragged canonical "
+                "form — migrate the state first")
         out["pred"] = {
-            k: shardings_for(param_axes[k], state_sds["pred"][k], mesh,
-                             rules)
-            for k in state_sds["pred"]
+            "outer": shardings_for(param_axes["outer"],
+                                   state_sds["pred"]["outer"], mesh, rules),
+            "stages": _stage_tree_shardings(
+                model, state_sds["pred"]["stages"], mesh_of, rules),
         }
     if "batch_ring" in state_sds:
         out["batch_ring"] = jax.tree.map(
@@ -194,22 +252,60 @@ def stream_state_shardings(model, state_sds: Dict[str, Any], mesh: Mesh,
                               s, act_rules),
             state_sds["batch_ring"])
     if "w_stash" in state_sds:
-        stash_rules = dict(rules)
-        # ragged stash leaves are [R, ...] (ring first); stacked were
-        # [S, R, ...] (stage, then ring)
-        ring_ax = ((lambda ax: (None,) + tuple(ax)) if ragged else
-                   (lambda ax: (ax[0], None) + tuple(ax[1:])))
-        stash_axes = (type(state_sds["w_stash"])(
-            model.ragged_stage_axes(len(state_sds["w_stash"])))
-            if ragged else
-            (param_axes["stages"] if isinstance(param_axes, dict)
-             else param_axes))
-        out["w_stash"] = jax.tree.map(
-            lambda ax, s: by_axes(ring_ax(ax), s, stash_rules),
-            stash_axes, state_sds["w_stash"],
-            is_leaf=lambda x: isinstance(x, tuple) and all(
-                isinstance(a, (str, type(None))) for a in x))
+        # ragged stash leaves are [R, ...] (ring first, per stage tree)
+        if not ragged:
+            raise ValueError(
+                "pipedream weight-stash states carry ragged stage "
+                "trees; a stacked [S, R, ...] 'w_stash' predates the "
+                "ragged canonical form — migrate the state first "
+                "(runtime/checkpoint.py restores it bit-exactly)")
+        out["w_stash"] = _stage_tree_shardings(
+            model, state_sds["w_stash"], mesh_of, rules,
+            lead_axes=(None,))
     return out
+
+
+def stream_state_shardings(model, state_sds: Dict[str, Any], mesh: Mesh,
+                           rules: Dict[str, AxisVal], *, zero1: bool = True):
+    """NamedShardings for the streaming (or sync / IR-interpreter) state,
+    usable as jit in/out shardings (everything lives on the full mesh).
+
+    Handles the ragged per-stage canonical param layout (tuple of
+    per-stage trees — including virtual-stage states with
+    ``n_chunks = S·v`` chunk trees) plus dict-structured stage layouts
+    without a stage stack (enc-dec ``{"enc", "dec"}``).  Pre-ragged
+    stacked ``[S, Lps, ...]`` states are *not* shardable here — migrate
+    them first (the checkpoint shim restores them bit-exactly onto a
+    ragged template).  Ragged stage trees have no leading ``[S]`` dim a
+    PartitionSpec could pin to ``pipe``, so inside one SPMD computation
+    they shard only over the non-pipe axes (replicating across
+    ``pipe``); use :func:`stage_placement_shardings` to *place* the
+    materialized state stage-k-on-pipe-device-k and avoid the S×
+    weight-memory cost."""
+    return _state_shardings(model, state_sds, mesh, rules, zero1=zero1)
+
+
+def stage_placement_shardings(model, state_sds: Dict[str, Any], mesh: Mesh,
+                              rules: Dict[str, AxisVal], *,
+                              zero1: bool = True):
+    """Explicit per-stage placement map for a ragged state: a shardings
+    pytree for ``jax.device_put`` that pins every leaf of (chunk-)stage
+    tree ``i`` — params, momentum, fused-predict mirror, the 2BW double
+    buffer, and the pipedream ``w_stash`` ring — onto pipe device
+    ``i % S``'s sub-mesh (Megatron folding for virtual stages), sharded
+    within the stage by the usual non-pipe rules.
+
+    This is the paper's §3 placement model for differently-shaped stage
+    trees: a single PartitionSpec cannot express it, so it is a
+    placement *map*, not a jit sharding — rings/outer stay on the full
+    mesh, stage weights live only on their stage's devices."""
+    subs = stage_submeshes(mesh, model.n_stages)
+    if subs is None:
+        raise ValueError(
+            f"mesh {dict(axis_sizes(mesh))} has no pipe axis of size "
+            f"{model.n_stages} to place {model.n_stages} stages on")
+    return _state_shardings(model, state_sds, mesh, rules, zero1=zero1,
+                            stage_mesh_of=lambda i: subs[i % len(subs)])
 
 
 def batch_specs(cfg: ArchConfig, batch_sds: Dict[str, Any], mesh: Mesh,

@@ -56,6 +56,71 @@ class TestRoundtrip:
         assert ckpt.latest_step(d) == 9
 
 
+class TestStackedMigration:
+    """Pre-ragged stacked ``[S, Lps, ...]`` checkpoints restore
+    bit-exactly onto the ragged canonical template via the shim."""
+
+    def test_stacked_checkpoint_loads_bit_exact(self, setup, tmp_path):
+        d, m, state, step, batch = setup
+        # take a few real steps so momentum / w_stash are non-trivial
+        state2 = pipeline_stream.make_state(
+            m, jax.tree.map(jnp.asarray, state["params"]),
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                         batch), mode="pipedream")
+        pd_step = jax.jit(pipeline_stream.make_train_step(
+            m, mode="pipedream", lr=0.02))
+        for _ in range(4):
+            state2, _ = pd_step(state2, batch)
+
+        # re-spell the state the way the pre-refactor runtime stored it:
+        # stacked stage trees and a [S, R, ...] weight ring
+        old = dict(state2)
+        old["params"] = {
+            "outer": state2["params"]["outer"],
+            "stages": m.stack_stage_params(state2["params"]["stages"])}
+        old["momentum"] = {
+            "outer": state2["momentum"]["outer"],
+            "stages": m.stack_stage_params(state2["momentum"]["stages"])}
+        old["w_stash"] = jax.tree.map(lambda *xs: jnp.stack(xs, 0),
+                                      *state2["w_stash"])
+        ckpt.save(str(tmp_path), old, 5)
+
+        got, s = ckpt.restore(str(tmp_path), state2)
+        assert s == 5
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(state2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_migrated_state_resumes_identically(self, setup, tmp_path):
+        """Training from a migrated stacked checkpoint == training from
+        the ragged original, bitwise."""
+        d, m, state, step, batch = setup
+        for _ in range(3):
+            state, _ = step(state, batch)
+        old = dict(state)
+        old["params"] = {
+            "outer": state["params"]["outer"],
+            "stages": m.stack_stage_params(state["params"]["stages"])}
+        old["momentum"] = {
+            "outer": state["momentum"]["outer"],
+            "stages": m.stack_stage_params(state["momentum"]["stages"])}
+        ckpt.save(str(tmp_path), old, 2)
+        restored, _ = ckpt.restore(str(tmp_path), state)
+        s_a, s_b = state, restored
+        for _ in range(3):
+            s_a, _ = step(s_a, batch)
+            s_b, _ = step(s_b, batch)
+        for a, b in zip(jax.tree.leaves(s_a["params"]),
+                        jax.tree.leaves(s_b["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_missing_leaf_raises_key_error(self, setup, tmp_path):
+        d, m, state, step, batch = setup
+        ckpt.save(str(tmp_path), {"params": state["params"]}, 1)
+        with pytest.raises(KeyError, match="momentum"):
+            ckpt.restore(str(tmp_path), {"params": state["params"],
+                                         "momentum": state["momentum"]})
+
+
 class TestExactResume:
     def test_resume_reproduces_trajectory(self, setup):
         """train 6 == train 3 + save + restore + train 3, bitwise."""

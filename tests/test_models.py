@@ -125,18 +125,44 @@ def test_vision_patches_change_output():
 
 
 def test_pipeline_stage_split_preserves_forward():
-    """Model with S stages == model with 1 stage given restacked params."""
-    from repro.runtime.elastic import restack_stages
+    """Model with S stages == model with 1 stage given repartitioned
+    params (ragged canonical trees, flat layer order preserved)."""
     cfg2 = tiny_cfg("granite-8b", n_layers=4, pipe=2)
     cfg1 = tiny_cfg("granite-8b", n_layers=4, pipe=1)
     m2, m1 = Model(cfg2), Model(cfg1)
     params2 = m2.init(jax.random.PRNGKey(0))
     params1 = {
         "outer": params2["outer"],
-        "stages": {"layers": restack_stages(
-            {"x": params2["stages"]["layers"]}, 1)["x"]},
+        "stages": m1.partition_stage_params(params2["stages"], (4,)),
     }
     batch = lm_batch(jax.random.PRNGKey(1), cfg2, batch=2, seq=16)
     la, _ = m2.forward(params2, batch)
+    lb, _ = m1.forward(params1, batch)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-5)
+
+
+def test_ragged_init_no_divisibility_constraint():
+    """7 layers / 3 stages initializes with sizes (3, 2, 2), matches the
+    flat-layer forward of the single-stage model bit-for-bit in layer
+    order, and init is RNG-compatible with a uniform split."""
+    cfg = tiny_cfg("granite-8b", n_layers=7, pipe=3)
+    m = Model(cfg)
+    assert m.stage_sizes == (3, 2, 2)
+    params = m.init(jax.random.PRNGKey(0))
+    got = tuple(jax.tree.leaves(t["layers"])[0].shape[0]
+                for t in params["stages"])
+    assert got == (3, 2, 2)
+    with pytest.raises(ValueError, match="ragged"):
+        m.layers_per_stage
+
+    cfg1 = tiny_cfg("granite-8b", n_layers=7, pipe=1)
+    m1 = Model(cfg1)
+    params1 = m1.init(jax.random.PRNGKey(0))
+    # same key -> same flat layer values regardless of the split
+    for a, b in zip(jax.tree.leaves(m.flat_layers(params["stages"])),
+                    jax.tree.leaves(m1.flat_layers(params1["stages"]))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    batch = lm_batch(jax.random.PRNGKey(1), cfg, batch=2, seq=16)
+    la, _ = m.forward(params, batch)
     lb, _ = m1.forward(params1, batch)
     np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-5)

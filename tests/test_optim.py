@@ -41,6 +41,67 @@ class TestMomentumSGD:
                                    np.asarray(g["a"]))
 
 
+class TestClipLayoutEquivalence:
+    """Global-norm clipping is canonicalized: the ragged per-stage and
+    stacked stage layouts (and any two partitions of the same layers)
+    reduce the identical partial vector in the identical order, so the
+    clipped gradients agree BITWISE — the one layout-sensitive numeric
+    the golden cases (which don't clip) could not pin."""
+
+    def _model_grads(self, n_layers=4, pipe=2):
+        from conftest import lm_batch, tiny_cfg
+        from repro.models import Model
+        m = Model(tiny_cfg("granite-8b", n_layers=n_layers, pipe=pipe))
+        params = m.init(jax.random.PRNGKey(0))
+        batch = lm_batch(jax.random.PRNGKey(1), m.cfg, batch=2, seq=8)
+        return m, jax.grad(lambda p: m.loss(p, batch))(params)
+
+    def test_stacked_vs_ragged_bitwise(self):
+        m, g = self._model_grads()
+        g_stacked = {"outer": g["outer"],
+                     "stages": m.stack_stage_params(g["stages"])}
+        n_r = sgd.global_norm(g)
+        n_s = sgd.global_norm(g_stacked)
+        assert float(n_r) == float(n_s)          # bitwise, not approx
+        c_r, _ = sgd.clip_by_global_norm(g, 0.05)
+        c_s, _ = sgd.clip_by_global_norm(g_stacked, 0.05)
+        back = m.partition_stage_params(c_s["stages"], (2, 2))
+        for a, b in zip(jax.tree.leaves(c_r["stages"]),
+                        jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_bitwise_under_jit_and_across_partitions(self):
+        """jit must not re-associate the canonical reduction, and any
+        two partitions of the same 7 layers must agree."""
+        m, g = self._model_grads(n_layers=7, pipe=3)   # sizes (3, 2, 2)
+        g_alt = {"outer": g["outer"],
+                 "stages": m.partition_stage_params(g["stages"],
+                                                    (1, 3, 3))}
+        n_a = jax.jit(sgd.global_norm)(g)
+        n_b = jax.jit(sgd.global_norm)(g_alt)
+        assert float(n_a) == float(n_b)
+
+    def test_clip_enabled_training_step_layout_invariant(self):
+        """A full clipped update agrees across layouts: clip + momentum
+        SGD on stacked == on ragged, bitwise after regrouping."""
+        m, g = self._model_grads()
+        params = m.init(jax.random.PRNGKey(0))
+        mom = sgd.init(params)
+        c, _ = sgd.clip_by_global_norm(g, 0.1)
+        p_r, _ = sgd.update(params, mom, c, lr=0.05)
+
+        params_s = {"outer": params["outer"],
+                    "stages": m.stack_stage_params(params["stages"])}
+        g_s = {"outer": g["outer"],
+               "stages": m.stack_stage_params(g["stages"])}
+        c_s, _ = sgd.clip_by_global_norm(g_s, 0.1)
+        p_s, _ = sgd.update(params_s, sgd.init(params_s), c_s, lr=0.05)
+        back = m.partition_stage_params(p_s["stages"], (2, 2))
+        for a, b in zip(jax.tree.leaves(p_r["stages"]),
+                        jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 class TestAdam:
     def test_descends_quadratic(self):
         w = jnp.asarray([5.0, -3.0])

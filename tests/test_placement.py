@@ -1,0 +1,126 @@
+"""Per-stage device placement for ragged stage weights.
+
+Runs on a forced multi-device host mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count=4`` — the dedicated
+CI placement job sets this); skipped on single-device runs, where the
+pipe axis cannot be materialized.
+
+The property under test is the paper's §3 placement model: stage ``k``'s
+params / momentum / fused-predict mirror / pipedream ``w_stash`` live
+*only* on pipe device ``k`` — no ``pipe``-axis replication — for both
+uniform and DP (non-uniform) plans, while activation rings stay on the
+full mesh.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from conftest import lm_batch, tiny_cfg
+from repro.core import pipeline_stream
+from repro.models import Model
+from repro.planner import plan, synthetic_profile
+from repro.runtime import sharding as sh
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >= 4 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+def _mesh():
+    return Mesh(np.array(jax.devices()[:4]).reshape(1, 4), ("data", "pipe"))
+
+
+def _state(cfg, mode="pipedream", pplan=None, fused_predict=False):
+    m = Model(cfg)
+    b = lm_batch(jax.random.PRNGKey(1), cfg, batch=4, seq=8)
+    sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), b)
+    state = pipeline_stream.make_state(
+        m, m.init(jax.random.PRNGKey(0)), sds, mode=mode, plan=pplan,
+        fused_predict=fused_predict)
+    return m, state
+
+
+def _stage_devices(tree):
+    return {d for leaf in jax.tree.leaves(tree)
+            for d in leaf.sharding.device_set}
+
+
+def _assert_stage_pinned(placed, mesh, n_stages):
+    """Every per-stage tree of every weight-like state entry sits on
+    exactly its own pipe device."""
+    pipe_devs = [mesh.devices[0, k] for k in range(n_stages)]
+    checked = 0
+    for name in ("params", "momentum", "pred"):
+        if name not in placed:
+            continue
+        for k, t in enumerate(placed[name]["stages"]):
+            devs = _stage_devices(t)
+            assert devs == {pipe_devs[k % n_stages]}, (name, k, devs)
+            checked += 1
+    if "w_stash" in placed:
+        for k, t in enumerate(placed["w_stash"]):
+            assert _stage_devices(t) == {pipe_devs[k % n_stages]}, ("w", k)
+            checked += 1
+    assert checked >= 2 * n_stages
+
+
+class TestStagePlacement:
+    def test_uniform_plan_pins_each_stage(self):
+        mesh = _mesh()
+        cfg = tiny_cfg("granite-8b", n_layers=8, pipe=4)
+        m, state = _state(cfg, mode="pipedream")
+        rules = sh.logical_rules(cfg, mesh)
+        sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        shards = sh.stage_placement_shardings(m, sds, mesh, rules)
+        placed = jax.device_put(state, shards)
+        _assert_stage_pinned(placed, mesh, 4)
+        # activation rings stay on the full mesh, not one device
+        assert len(_stage_devices(placed["fwd_buf"])) == 4
+
+    def test_dp_plan_pins_ragged_stages(self):
+        """Non-uniform (DP) partition: differently-shaped stage trees
+        still pin to their own pipe device."""
+        mesh = _mesh()
+        p = plan(profile=synthetic_profile([9.0, 9.0, 9.0, 1.0, 1.0, 1.0,
+                                            1.0]),
+                 n_stages=4, schedule="stream", partitioner="dp")
+        sizes = p.partition.sizes()
+        assert len(set(sizes)) > 1, sizes    # genuinely ragged
+        cfg = tiny_cfg("granite-8b", n_layers=7, pipe=4)
+        m, state = _state(cfg, mode="spectrain", pplan=p,
+                          fused_predict=True)
+        rules = sh.logical_rules(cfg, mesh)
+        sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        shards = sh.stage_placement_shardings(m, sds, mesh, rules)
+        placed = jax.device_put(state, shards)
+        _assert_stage_pinned(placed, mesh, 4)
+
+    def test_spmd_shardings_still_full_mesh(self):
+        """stream_state_shardings (the jit path) keeps every leaf on the
+        full mesh — placement maps and SPMD specs are distinct tools."""
+        mesh = _mesh()
+        cfg = tiny_cfg("granite-8b", n_layers=8, pipe=4)
+        m, state = _state(cfg)
+        rules = sh.logical_rules(cfg, mesh)
+        sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        shards = sh.stream_state_shardings(m, sds, mesh, rules)
+        for s in jax.tree.leaves(
+                shards, is_leaf=lambda x: hasattr(x, "device_set")):
+            assert s.mesh.devices.size == 4
+
+    def test_no_pipe_axis_raises(self):
+        mesh = Mesh(np.array(jax.devices()[:4]).reshape(4), ("data",))
+        cfg = tiny_cfg("granite-8b", n_layers=8, pipe=4)
+        m, state = _state(cfg)
+        rules = sh.logical_rules(cfg, mesh)
+        sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        with pytest.raises(ValueError, match="pipe"):
+            sh.stage_placement_shardings(m, sds, mesh, rules)

@@ -1,0 +1,250 @@
+"""Ragged-native canonical layout: acceptance tests for the
+no-divisibility-constraint world.
+
+A model with ``n_layers=7, n_stages=3`` (and a DP plan such as sizes
+``(1, 3, 3)``) must initialize, train, checkpoint and restore under
+both the streaming tick path and the IR interpreter; plan-shape
+violations must raise ``ValueError`` (not ``assert``, which vanishes
+under ``python -O``).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import lm_batch, tiny_cfg
+from repro.core import pipeline_stream
+from repro.models import Model
+from repro.planner import plan, synthetic_profile
+from repro.runtime import checkpoint as ckpt
+
+
+def _setup(n_layers=7, pipe=3, batch=6, seq=16):
+    cfg = tiny_cfg("granite-8b", n_layers=n_layers, pipe=pipe)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    b = lm_batch(jax.random.PRNGKey(1), cfg, batch=batch, seq=seq)
+    sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), b)
+    return cfg, m, params, b, sds
+
+
+# skew whose bottleneck-minimizing 3-way split of 7 layers is uniquely
+# (1, 3, 3): per-stage costs 3/3/3
+_SKEW_7 = [3.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]
+
+
+def _dp_plan_133(schedule="stream", **kw):
+    p = plan(profile=synthetic_profile(_SKEW_7), n_stages=3,
+             schedule=schedule, partitioner="dp", **kw)
+    assert p.partition.sizes() == (1, 3, 3), p.partition.sizes()
+    return p
+
+
+class TestStream73:
+    def test_default_split_trains_and_checkpoints(self, tmp_path):
+        cfg, m, params, batch, sds = _setup()
+        assert m.stage_sizes == (3, 2, 2)
+        state = pipeline_stream.make_state(m, params, sds)
+        step = jax.jit(pipeline_stream.make_train_step(
+            m, mode="spectrain", lr=0.05))
+        losses = []
+        for _ in range(16):
+            state, met = step(state, batch)
+            if float(met["loss_valid"]):
+                losses.append(float(met["loss"]))
+        assert np.isfinite(losses).all() and losses[-1] < losses[0]
+
+        ckpt.save(str(tmp_path), state, 7)
+        got, s = ckpt.restore(str(tmp_path), state)
+        assert s == 7
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_dp_plan_133_executes(self):
+        cfg, m, params, batch, sds = _setup()
+        p = _dp_plan_133()
+        state = pipeline_stream.make_state(m, params, sds, plan=p)
+        got = tuple(jax.tree.leaves(t["layers"])[0].shape[0]
+                    for t in state["params"]["stages"])
+        assert got == (1, 3, 3)
+        step = jax.jit(pipeline_stream.make_train_step(
+            m, mode="spectrain", lr=0.05, plan=p))
+        losses = []
+        for _ in range(16):
+            state, met = step(state, batch)
+            if float(met["loss_valid"]):
+                losses.append(float(met["loss"]))
+        assert np.isfinite(losses).all() and losses[-1] < losses[0]
+
+    def test_partitions_agree_on_flat_layers_at_init(self):
+        """Repartitioning canonical trees to a plan's sizes preserves
+        the flat layer order bit-for-bit."""
+        cfg, m, params, batch, sds = _setup()
+        p = _dp_plan_133()
+        ragged = m.partition_stage_params(params["stages"],
+                                          p.partition.sizes())
+        for a, b in zip(jax.tree.leaves(m.flat_layers(ragged)),
+                        jax.tree.leaves(m.flat_layers(params["stages"]))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestIRInterpreter73:
+    @pytest.mark.parametrize("schedule", ["1f1b", "2bw"])
+    def test_trains_and_checkpoints(self, schedule, tmp_path):
+        cfg, m, params, batch, sds = _setup()
+        p = _dp_plan_133(schedule=schedule, n_microbatches=3)
+        state = pipeline_stream.make_ir_state(m, params, sds, plan=p)
+        step = jax.jit(pipeline_stream.make_ir_train_step(
+            m, plan=p, mode="spectrain", lr=0.05))
+        losses = []
+        for _ in range(8):
+            state, met = step(state, batch)
+            losses.append(float(met["loss"]))
+        assert np.isfinite(losses).all() and losses[-1] < losses[0]
+
+        ckpt.save(str(tmp_path), state, 3)
+        got, _ = ckpt.restore(str(tmp_path), state)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestCrossPartitionRestore:
+    """A checkpoint written under one partition restores bit-exactly
+    onto any other via the flat layer order (train.py's promise)."""
+
+    def test_dp_checkpoint_restores_onto_uniform(self, tmp_path):
+        cfg, m, params, batch, sds = _setup()
+        p = _dp_plan_133()
+        state_dp = pipeline_stream.make_state(m, params, sds, plan=p)
+        step = jax.jit(pipeline_stream.make_train_step(
+            m, mode="spectrain", lr=0.05, plan=p))
+        for _ in range(5):
+            state_dp, _ = step(state_dp, batch)
+        ckpt.save(str(tmp_path), state_dp, 4)
+
+        state_uni = pipeline_stream.make_state(m, params, sds)  # (3,2,2)
+        got, s = ckpt.restore(str(tmp_path), state_uni)
+        assert s == 4
+        got_sizes = tuple(jax.tree.leaves(t["layers"])[0].shape[0]
+                          for t in got["params"]["stages"])
+        assert got_sizes == (3, 2, 2)
+        # flat layer order identical to the DP state's
+        for a, b in zip(
+                jax.tree.leaves(m.flat_layers(got["params"]["stages"])),
+                jax.tree.leaves(m.flat_layers(state_dp["params"]["stages"]))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(
+                jax.tree.leaves(m.flat_layers(got["momentum"]["stages"])),
+                jax.tree.leaves(
+                    m.flat_layers(state_dp["momentum"]["stages"]))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_shape_coincident_stage_still_repartitions(self, tmp_path):
+        """Repartitioning is a group decision, not per-leaf: restoring
+        (1,3,3) onto (3,3,1), the middle stage has the same shape in
+        both partitions but covers flat layers 1-3 vs 3-5 — a per-leaf
+        shape check would silently duplicate/drop layers."""
+        cfg, m, params, batch, sds = _setup()
+        p_a = _dp_plan_133()                                  # (1, 3, 3)
+        p_b = plan(profile=synthetic_profile(
+            [1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 3.0]), n_stages=3,
+            schedule="stream", partitioner="dp")
+        assert p_b.partition.sizes() == (3, 3, 1)
+        state_a = pipeline_stream.make_state(m, params, sds, plan=p_a)
+        step = jax.jit(pipeline_stream.make_train_step(
+            m, mode="spectrain", lr=0.05, plan=p_a))
+        for _ in range(3):
+            state_a, _ = step(state_a, batch)
+        ckpt.save(str(tmp_path), state_a, 2)
+        state_b = pipeline_stream.make_state(m, params, sds, plan=p_b)
+        got, _ = ckpt.restore(str(tmp_path), state_b)
+        for a, b in zip(
+                jax.tree.leaves(m.flat_layers(got["params"]["stages"])),
+                jax.tree.leaves(m.flat_layers(state_a["params"]["stages"]))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_stacked_checkpoint_restores_onto_dp_template(self, tmp_path):
+        """A pre-ragged stacked checkpoint repartitions onto a
+        non-uniform template via the same flat-layer-order path."""
+        cfg, m, params, batch, sds = _setup(n_layers=8, pipe=4, batch=4)
+        state = pipeline_stream.make_state(m, params, sds)   # (2,2,2,2)
+        old = dict(state)
+        old["params"] = {
+            "outer": state["params"]["outer"],
+            "stages": m.stack_stage_params(state["params"]["stages"])}
+        old["momentum"] = {
+            "outer": state["momentum"]["outer"],
+            "stages": m.stack_stage_params(state["momentum"]["stages"])}
+        ckpt.save(str(tmp_path), old, 1)
+
+        p = plan(profile=synthetic_profile(
+            [5.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 2.0]), n_stages=4,
+            schedule="stream", partitioner="dp")
+        assert len(set(p.partition.sizes())) > 1   # genuinely ragged
+        state_dp = pipeline_stream.make_state(m, params, sds, plan=p)
+        got, _ = ckpt.restore(str(tmp_path), state_dp)
+        for a, b in zip(
+                jax.tree.leaves(m.flat_layers(got["params"]["stages"])),
+                jax.tree.leaves(m.flat_layers(state["params"]["stages"]))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_ring_state_refuses_cross_partition(self, tmp_path):
+        """pipedream's in-flight weight ring has no flat layer order —
+        restoring it across partitions must raise, not corrupt."""
+        cfg, m, params, batch, sds = _setup()
+        p = _dp_plan_133()
+        state_dp = pipeline_stream.make_state(m, params, sds, plan=p,
+                                              mode="pipedream")
+        ckpt.save(str(tmp_path), state_dp, 1)
+        state_uni = pipeline_stream.make_state(m, params, sds,
+                                               mode="pipedream")
+        with pytest.raises(ValueError, match="repartition"):
+            ckpt.restore(str(tmp_path), state_uni)
+
+
+class TestHybridRaggedDecode:
+    def test_plan_partitioned_hybrid_decodes_like_its_forward(self):
+        """Hybrid (shared-attn) models segment shared blocks by the
+        param tree's ACTUAL partition: a non-default split must decode
+        consistently with its own teacher-forced forward (cache built
+        via init_cache(stage_sizes=...))."""
+        cfg = tiny_cfg("zamba2-1.2b", n_layers=4, pipe=2)
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        sizes = (1, 3)                       # != default (2, 2)
+        p2 = {"outer": params["outer"],
+              "stages": m.partition_stage_params(params["stages"], sizes)}
+        assert m.stage_sizes_of(p2["stages"]) == sizes
+        B, T = 2, 6
+        batch = lm_batch(jax.random.PRNGKey(1), cfg, batch=B, seq=T)
+        full, _ = m.forward(p2, batch)
+        cache = m.init_cache(B, T, stage_sizes=sizes)
+        errs = []
+        for t in range(T):
+            lg, cache = m.decode_step(p2, cache, batch["tokens"][:, t:t + 1],
+                                      jnp.asarray(t, jnp.int32))
+            errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))))
+        assert max(errs) < 2e-3, errs
+
+
+class TestValueErrorsSurviveOptimizedMode:
+    """Plan/shape invariants raise ValueError, never bare assert."""
+
+    def test_ir_round_size_mismatch_is_value_error(self):
+        cfg, m, params, batch, sds = _setup(batch=6)
+        p = _dp_plan_133(schedule="1f1b", n_microbatches=4)
+        state = pipeline_stream.make_ir_state(m, params, sds, plan=p)
+        step = pipeline_stream.make_ir_train_step(
+            m, plan=p, mode="spectrain", lr=0.05)
+        with pytest.raises(ValueError, match="round size"):
+            step(state, batch)   # 6 % 4 != 0
+
+    def test_ticks_per_step_mismatch_is_value_error(self):
+        cfg, m, params, batch, sds = _setup(batch=6)
+        with pytest.raises(ValueError, match="ticks_per_step"):
+            pipeline_stream.make_state(m, params, sds, ticks_per_step=4)
+
+    def test_empty_stage_still_rejected(self):
+        with pytest.raises(ValueError, match="empty"):
+            Model(tiny_cfg("granite-8b", n_layers=2, pipe=3))

@@ -206,10 +206,13 @@ class TestPlanValidation:
             m.partition_stage_params(params["stages"], (1, 1, 2))
 
     def test_ragged_roundtrip_uniform(self):
+        """ragged canonical -> legacy stacked -> ragged is lossless
+        (stack_stage_params is the uniform-sizes inverse)."""
         m, params, _ = self._mk(n_layers=4)
-        ragged = m.partition_stage_params(params["stages"], (2, 2))
-        back = m.stack_stage_params(ragged)
-        for a, b in zip(jax.tree.leaves(back),
+        stacked = m.stack_stage_params(params["stages"])
+        assert jax.tree.leaves(stacked["layers"])[0].shape[:2] == (2, 2)
+        again = m.partition_stage_params(stacked, (2, 2))
+        for a, b in zip(jax.tree.leaves(again),
                         jax.tree.leaves(params["stages"])):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         with pytest.raises(ValueError, match="ragged"):

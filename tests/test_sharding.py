@@ -128,8 +128,8 @@ class TestMoEDispatch:
         cfg = tiny_cfg("deepseek-moe-16b", n_layers=2, pipe=1)
         m = Model(cfg)
         params = m.init(jax.random.PRNGKey(0))
-        lp = jax.tree.map(lambda a: a[0, 0],
-                          params["stages"]["layers"])
+        lp = jax.tree.map(lambda a: a[0],
+                          params["stages"][0]["layers"])
         x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
         out, aux = moe_mod.moe_apply(cfg, lp["moe"], x)
         assert out.shape == x.shape
@@ -144,7 +144,7 @@ class TestMoEDispatch:
                                                   capacity_factor=8.0))
         m = Model(cfg)
         params = m.init(jax.random.PRNGKey(0))
-        lp = jax.tree.map(lambda a: a[0, 0], params["stages"]["layers"])
+        lp = jax.tree.map(lambda a: a[0], params["stages"][0]["layers"])
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
         old = moe_mod.DISPATCH_GROUPS
         try:
@@ -163,7 +163,7 @@ class TestMoEDispatch:
         cfg = tiny_cfg("grok-1-314b", n_layers=2, pipe=1)
         m = Model(cfg)
         params = m.init(jax.random.PRNGKey(0))
-        lp = jax.tree.map(lambda a: a[0, 0], params["stages"]["layers"])
+        lp = jax.tree.map(lambda a: a[0], params["stages"][0]["layers"])
         # zero router -> uniform probs -> aux = coef * E * sum(1/E * k/E)
         lp["moe"]["router"] = jnp.zeros_like(lp["moe"]["router"])
         x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
