@@ -1,0 +1,73 @@
+"""Benchmark-regression gate for CI.
+
+Compares a fresh ``run.py --json-out`` dump against the committed
+``benchmarks/baseline.json`` and exits non-zero when any shared
+benchmark slowed down by more than ``--max-ratio``, or when a baseline
+benchmark disappeared from the new run (a silently dropped bench would
+otherwise un-gate itself).
+
+Timings below ``--min-us`` on both sides are reported but never fail
+the gate — at that scale the numbers are scheduler noise, not
+regressions.  New benchmarks (present only in the new run) pass with a
+note; commit an updated baseline to start gating them.
+
+Usage:
+    python benchmarks/run.py --only planner,kernels --json-out new.json
+    python benchmarks/compare.py new.json benchmarks/baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="fresh run.py --json-out dump")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--max-ratio", type=float, default=1.5,
+                    dest="max_ratio",
+                    help="fail when new/base exceeds this (default 1.5)")
+    ap.add_argument("--min-us", type=float, default=50.0, dest="min_us",
+                    help="noise floor: rows under this on both sides "
+                         "never fail the gate (default 50us)")
+    args = ap.parse_args(argv)
+
+    with open(args.new) as f:
+        new = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    regressions = []
+    print(f"{'benchmark':<40} {'base_us':>10} {'new_us':>10} {'ratio':>7}")
+    for name in sorted(set(new) & set(base)):
+        n, b = float(new[name]), float(base[name])
+        ratio = n / b if b > 0 else float("inf")
+        noise = max(n, b) < args.min_us
+        bad = ratio > args.max_ratio and not noise
+        tag = " REGRESSION" if bad else (" (noise floor)" if noise else "")
+        print(f"{name:<40} {b:>10.0f} {n:>10.0f} {ratio:>7.2f}{tag}")
+        if bad:
+            regressions.append((name, ratio))
+    for name in sorted(set(new) - set(base)):
+        print(f"{name:<40} {'-':>10} {float(new[name]):>10.0f}   (new, "
+              f"not gated)")
+    missing = sorted(set(base) - set(new))
+    for name in missing:
+        print(f"{name:<40} {float(base[name]):>10.0f} {'-':>10}   MISSING")
+
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} benchmark(s) regressed more "
+              f"than {args.max_ratio}x: "
+              + ", ".join(f"{n} ({r:.2f}x)" for n, r in regressions))
+    if missing:
+        print(f"\nFAIL: {len(missing)} baseline benchmark(s) missing from "
+              f"the new run: " + ", ".join(missing))
+    if not regressions and not missing:
+        print(f"\nOK: no regression beyond {args.max_ratio}x "
+              f"({len(set(new) & set(base))} benchmarks gated)")
+    return 1 if (regressions or missing) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,95 @@
+"""IR-interpreter cost vs round size: trace / compile / step time.
+
+The scan backend exists to keep the round body's trace (and therefore
+XLA compile time) constant as M·C grows; this benchmark measures that
+directly against the unrolled reference oracle.
+
+Rows:
+  ir/<backend>/M<M>  — us_per_call is steady step wall time (CPU); the
+                       derived column shows trace_ms (jax.make_jaxpr),
+                       compile_ms (lower + compile) and the recursive
+                       jaxpr equation count.
+
+Expected shape: scan rows have ~flat trace_ms / compile_ms / eqns in M;
+unrolled rows grow ~linearly in M (and dominate wall-clock long before
+the paper-scale M·C ≫ 100 regime).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+def _count_eqns(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        n += 1
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (list, tuple)) else [v]
+            for x in vs:
+                if hasattr(x, "jaxpr"):
+                    n += _count_eqns(x.jaxpr)
+                elif hasattr(x, "eqns"):
+                    n += _count_eqns(x)
+    return n
+
+
+def main(fast: bool = True):
+    import jax
+
+    from repro.configs import get_config, smoke_config
+    from repro.core import pipeline_stream
+    from repro.models import Model
+    from repro.planner import plan, synthetic_profile
+
+    cfg = smoke_config(get_config("granite-8b"))
+    cfg = cfg.replace(
+        n_layers=4,
+        mesh_plan=dataclasses.replace(cfg.mesh_plan, pipe=2),
+        param_dtype="float32", compute_dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    sizes = [4, 16] if fast else [4, 16, 64]
+    lines = []
+    for backend in pipeline_stream.IR_BACKENDS:
+        for M in sizes:
+            p = plan(profile=synthetic_profile([1.0] * cfg.n_layers),
+                     n_stages=2, schedule="1f1b", n_microbatches=M)
+            k = jax.random.PRNGKey(1)
+            batch = {
+                "tokens": jax.random.randint(k, (M, 16), 0, cfg.vocab_size),
+                "targets": jax.random.randint(k, (M, 16), 0,
+                                              cfg.vocab_size),
+            }
+            state = pipeline_stream.make_ir_state(model, params, None,
+                                                  plan=p)
+            step = pipeline_stream.make_ir_train_step(
+                model, plan=p, mode="spectrain", lr=0.05, backend=backend)
+
+            t0 = time.perf_counter()
+            jaxpr = jax.make_jaxpr(step)(state, batch)
+            trace_ms = (time.perf_counter() - t0) * 1e3
+            eqns = _count_eqns(jaxpr.jaxpr)
+
+            t0 = time.perf_counter()
+            compiled = jax.jit(step).lower(state, batch).compile()
+            compile_ms = (time.perf_counter() - t0) * 1e3
+
+            jax.block_until_ready(compiled(state, batch))   # warm-up
+            reps = 3
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = compiled(state, batch)
+            jax.block_until_ready(out)
+            us = (time.perf_counter() - t0) / reps * 1e6
+
+            lines.append(
+                f"ir/{backend}/M{M},{us:.0f},"
+                f"trace_ms={trace_ms:.0f};compile_ms={compile_ms:.0f};"
+                f"eqns={eqns}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

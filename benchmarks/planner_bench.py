@@ -8,6 +8,10 @@ Rows:
   planner/plan/<arch>           — end-to-end ``plan()`` time (profile +
                                   partition + IR emission + staleness
                                   derivation) on real configs.
+  planner/event_table/<spec>    — lowering one schedule round to the
+                                  dense int32 EventTable the scan
+                                  interpreter executes; derived shows
+                                  rows / switch branches / buffer slots.
 """
 from __future__ import annotations
 
@@ -53,6 +57,21 @@ def main(fast: bool = True):
         lines.append(f"planner/plan/{name},{us:.0f},"
                      f"s_fwd={'-'.join(map(str, p.s_fwd))};"
                      f"ring={p.ring_slots}")
+
+    specs = [("1f1b", 4, 32)] if fast else \
+            [("1f1b", 4, 32), ("2bw", 4, 32), ("interleaved", 4, 32)]
+    for sched, S, M in specs:
+        p = plan(profile=synthetic_profile([1.0] * (2 * S)), n_stages=S,
+                 schedule=sched, n_microbatches=M,
+                 virtual_stages=2 if sched == "interleaved" else 1)
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            t = p.event_table()
+        us = (time.perf_counter() - t0) / reps * 1e6
+        lines.append(f"planner/event_table/{sched}_S{S}xM{M},{us:.0f},"
+                     f"rows={t.rows.shape[0]};branches={len(t.branches)};"
+                     f"slots={t.n_val_slots}+{t.n_cot_slots}")
     return lines
 
 

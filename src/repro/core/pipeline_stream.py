@@ -45,7 +45,15 @@ executing the planner's round-based schedule families — GPipe, 1F1B
 One ``train_step`` call is one flush round (or 2BW accumulation group):
 the step walks the IR's compute events in timeline order instead of a
 hard-coded fill/steady/drain structure, so the control flow is the
-schedule.  Per-event weight reads resolve through the IR — flush
+schedule.  Two interchangeable round bodies exist (``backend=``):
+the default ``"scan"`` lowers the round to the planner's dense
+:class:`~repro.planner.schedule_ir.EventTable` and runs a ``lax.scan``
+over its rows with ``lax.switch`` dispatch per (opcode, chunk, lag) —
+trace size O(#branches) ≤ O(2·n_chunks), independent of the round's
+microbatch count; ``"unrolled"`` inlines every event into the trace
+(the original interpreter, kept as the reference oracle the scan
+backend is tested bit-identical against).  Per-event weight reads
+resolve through the IR — flush
 schedules read current weights (their derived staleness is 0), 2BW
 reads the previous version from a weight stash whose depth comes from
 ``Schedule.weight_stash_depth`` (2, the "double buffer"), and
@@ -423,7 +431,10 @@ def make_train_step(model, *, mode: str = "spectrain", lr: float,
 
 # one source of truth lives next to the emitters (schedule_ir has no
 # repro.core imports, so this does not cycle)
+from repro.planner import schedule_ir as sir  # noqa: E402
 from repro.planner.schedule_ir import ROUND_SCHEDULES as IR_SCHEDULES  # noqa: E402,E501
+
+IR_BACKENDS = ("scan", "unrolled")
 
 
 def _ir_plan_check(model, plan) -> Tuple[int, ...]:
@@ -469,30 +480,9 @@ def _round_program(plan):
     IR-derived version lag of that event's weight read (the per-(stage,
     microbatch) SpecTrain prediction distance).  Flush schedules use
     round 0; 2BW uses a steady accumulation group (every group executes
-    identically under the double-buffer rotation)."""
-    from repro.planner import schedule_ir as sir
-    sched = plan.ir
-    if sched is None:
-        kw = {}
-        if plan.schedule == "interleaved":
-            kw["v"] = plan.virtual_stages
-        if plan.round_microbatches:
-            kw["n_microbatches"] = plan.round_microbatches
-        sched = sir.emit(plan.schedule, plan.n_stages, **kw)
-    M = plan.round_microbatches
-    base = M if plan.schedule == "2bw" else 0
-    prog = []
-    for e in sched.events:
-        if e.kind == sir.UPDATE or not base <= e.mb < base + M:
-            continue
-        phase = "forward" if e.kind == sir.FWD else "backward"
-        prog.append((e.kind, e.mb - base, e.stage,
-                     sched.staleness(e.stage, phase, e.mb)))
-    n_compute = 2 * M * plan.n_chunks
-    if len(prog) != n_compute:
-        raise ValueError(f"round program has {len(prog)} events, expected "
-                         f"{n_compute}")
-    return prog
+    identically under the double-buffer rotation) — the base selection
+    and extraction live on the plan (``PipelinePlan.round_program``)."""
+    return plan.round_program()
 
 
 def make_ir_state(model, params, batch_sds, *, plan,
@@ -531,8 +521,8 @@ def make_ir_state(model, params, batch_sds, *, plan,
 
 
 def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
-                       gamma: float = 0.9,
-                       clip: Optional[float] = None) -> Callable:
+                       gamma: float = 0.9, clip: Optional[float] = None,
+                       backend: str = "scan") -> Callable:
     """Schedule-driven step: one call executes one flush round (gpipe /
     1f1b / interleaved) or one 2BW accumulation group of
     ``plan.round_microbatches`` microbatches, by interpreting the IR's
@@ -549,14 +539,35 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
     The gradient is the mean over the round's microbatches; the update
     applies once per round to current params (2BW then rotates the
     double buffer).
+
+    ``backend`` selects how the round body is built:
+
+      scan       (default) ``lax.scan`` over the plan's dense
+                 :class:`~repro.planner.schedule_ir.EventTable`, one row
+                 per compute event, dispatched by ``lax.switch`` over
+                 the table's (opcode, chunk, lag) branches — trace size
+                 O(#branches) ≤ 2·n_chunks, independent of M, so rounds
+                 with M·C ≫ 100 compile in constant time
+      unrolled   every compute event inlined into the trace (the
+                 original interpreter) — O(M·C) trace, kept as the
+                 reference oracle; ``tests/test_ir_scan.py`` pins the
+                 scan backend bit-identical to it
+
+    Both backends accumulate gradients, losses and the outer tree in
+    the same timeline order, so they are bitwise interchangeable.
     """
     assert mode in MODES, mode
+    if backend not in IR_BACKENDS:
+        raise ValueError(
+            f"unknown IR backend {backend!r}; known: {IR_BACKENDS}")
     sizes = _ir_plan_check(model, plan)
     del sizes
     prog = _round_program(plan)
     C = plan.n_chunks
     M = plan.round_microbatches
     two_buf = max(plan.w_stash_depth) > 1
+    table = (sir.compile_event_table(prog, C, M) if backend == "scan"
+             else None)
 
     def stage_fn(sp, xk):
         xk, aux = model.stage_apply(sp, (xk, jnp.zeros((), jnp.float32)))
@@ -604,50 +615,168 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
                 cache[key] = w
             return cache[key]
 
-        acts: Dict[Tuple[int, int], Any] = {}   # (m, q) -> chunk input
-        outs: Dict[Tuple[int, int], Any] = {}   # (m, q) -> chunk output
-        cots: Dict[Tuple[int, int], Any] = {}   # (m, q) -> output cotangent
-        g_chunks = [None] * C
-        g_outer = None
-        losses = []
+        # ------------------------------------------------ unrolled body
+        def unrolled_round():
+            acts: Dict[Tuple[int, int], Any] = {}  # (m, q) -> chunk input
+            outs: Dict[Tuple[int, int], Any] = {}  # (m, q) -> chunk output
+            cots: Dict[Tuple[int, int], Any] = {}  # (m, q) -> out cotangent
+            g_chunks = [None] * C
+            g_outer = None
+            losses = []
 
-        def acc(a, g):
-            return g if a is None else jax.tree.map(jnp.add, a, g)
+            def acc(a, g):
+                return g if a is None else jax.tree.map(jnp.add, a, g)
 
-        for kind, m, q, s in prog:
-            if kind == "fwd":
-                x = model.embed(outer_w(s), mb(m)) if q == 0 \
-                    else outs.pop((m, q - 1))
-                acts[(m, q)] = x
-                out, _aux = stage_fn(chunk_w(q, s), x)
-                outs[(m, q)] = out
-            else:
-                if q == C - 1:
-                    tgt = mb(m)["targets"]
-                    loss_m, head_vjp = jax.vjp(
-                        lambda o, xl: model.head_loss(o, xl, tgt),
-                        outer_w(s), outs.pop((m, q)))
-                    go_head, cot = head_vjp(jnp.ones((), loss_m.dtype))
-                    g_outer = acc(g_outer, go_head)
-                    losses.append(loss_m)
+            for kind, m, q, s in prog:
+                if kind == "fwd":
+                    x = model.embed(outer_w(s), mb(m)) if q == 0 \
+                        else outs.pop((m, q - 1))
+                    acts[(m, q)] = x
+                    out, _aux = stage_fn(chunk_w(q, s), x)
+                    outs[(m, q)] = out
                 else:
-                    cot = cots.pop((m, q + 1))
-                _, vjp_q = jax.vjp(stage_fn, chunk_w(q, s), acts.pop((m, q)))
-                gw, gx = vjp_q((cot, jnp.ones((), jnp.float32)))
-                g_chunks[q] = acc(g_chunks[q], gw)
-                if q == 0:
-                    _, evjp = jax.vjp(lambda o: model.embed(o, mb(m)),
-                                      outer_w(s))
-                    (go_embed,) = evjp(gx)
-                    g_outer = acc(g_outer, go_embed)
-                else:
-                    cots[(m, q)] = gx
-        if acts or outs or cots:
-            raise ValueError(
-                f"{plan.schedule!r} round program (round size {M}) left "
-                f"in-flight tensors: "
-                f"{sorted(acts) + sorted(outs) + sorted(cots)}")
+                    if q == C - 1:
+                        tgt = mb(m)["targets"]
+                        loss_m, head_vjp = jax.vjp(
+                            lambda o, xl: model.head_loss(o, xl, tgt),
+                            outer_w(s), outs.pop((m, q)))
+                        go_head, cot = head_vjp(jnp.ones((), loss_m.dtype))
+                        g_outer = acc(g_outer, go_head)
+                        losses.append(loss_m)
+                    else:
+                        cot = cots.pop((m, q + 1))
+                    _, vjp_q = jax.vjp(stage_fn, chunk_w(q, s),
+                                       acts.pop((m, q)))
+                    gw, gx = vjp_q((cot, jnp.ones((), jnp.float32)))
+                    g_chunks[q] = acc(g_chunks[q], gw)
+                    if q == 0:
+                        _, evjp = jax.vjp(lambda o: model.embed(o, mb(m)),
+                                          outer_w(s))
+                        (go_embed,) = evjp(gx)
+                        g_outer = acc(g_outer, go_embed)
+                    else:
+                        cots[(m, q)] = gx
+            if acts or outs or cots:
+                raise ValueError(
+                    f"{plan.schedule!r} round program (round size {M}) "
+                    f"left in-flight tensors: "
+                    f"{sorted(acts) + sorted(outs) + sorted(cots)}")
+            return g_outer, tuple(g_chunks), sum(losses) / len(losses)
 
+        # ---------------------------------------------------- scan body
+        def scan_round():
+            # activation/cotangent pools: uniform [n_slots, mb, seq, d]
+            # rings indexed by the table's register-allocated slots
+            # (d_model is constant at every cut, so one buffer serves
+            # all chunks; weights stay ragged per-chunk trees)
+            as_sds = lambda t: jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+            mb_sds = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), mbs)
+            x_sd = jax.eval_shape(model.embed, as_sds(base_p["outer"]),
+                                  mb_sds)
+            out_sd, _ = jax.eval_shape(stage_fn,
+                                       as_sds(base_p["stages"][0]), x_sd)
+            if (out_sd.shape, out_sd.dtype) != (x_sd.shape, x_sd.dtype):
+                raise ValueError(
+                    f"scan backend needs one uniform activation pool, got "
+                    f"embed {x_sd.shape}/{x_sd.dtype} vs stage "
+                    f"{out_sd.shape}/{out_sd.dtype}")
+            loss_sd = jax.eval_shape(model.head_loss,
+                                     as_sds(base_p["outer"]), out_sd,
+                                     mb_sds["targets"])
+
+            def first_or_add(acc, g, first):
+                # bit-compat with the unrolled body's None-then-assign
+                # accumulator: the first contribution must be g itself,
+                # not 0 + g (which flips the sign bit of exact -0.0s)
+                return jax.tree.map(
+                    lambda a, gg: jnp.where(first, gg, a + gg), acc, g)
+
+            def fwd_branch(q, s):
+                W, Wo = chunk_w(q, s), outer_w(s)
+
+                def br(carry, row):
+                    P, Q, gs, go, ls = carry
+                    m = row[sir.COL_MB]
+                    if q == 0:
+                        x = model.embed(Wo, mb(m))
+                        P = jax.lax.dynamic_update_index_in_dim(
+                            P, x, row[sir.COL_A], 0)
+                    else:
+                        x = jax.lax.dynamic_index_in_dim(
+                            P, row[sir.COL_A], 0, keepdims=False)
+                    out, _aux = stage_fn(W, x)
+                    P = jax.lax.dynamic_update_index_in_dim(
+                        P, out, row[sir.COL_B], 0)
+                    return (P, Q, gs, go, ls)
+                return br
+
+            def bwd_branch(q, s):
+                W, Wo = chunk_w(q, s), outer_w(s)
+
+                def br(carry, row):
+                    P, Q, gs, go, ls = carry
+                    first_g = row[sir.COL_FIRST_G] > 0
+                    first_o = row[sir.COL_FIRST_O] > 0
+                    m = row[sir.COL_MB]
+                    x = jax.lax.dynamic_index_in_dim(
+                        P, row[sir.COL_A], 0, keepdims=False)
+                    if q == C - 1:
+                        out = jax.lax.dynamic_index_in_dim(
+                            P, row[sir.COL_B], 0, keepdims=False)
+                        tgt = mb(m)["targets"]
+                        loss_m, head_vjp = jax.vjp(
+                            lambda o, xl: model.head_loss(o, xl, tgt),
+                            Wo, out)
+                        go_head, cot = head_vjp(jnp.ones((), loss_m.dtype))
+                        go = first_or_add(go, go_head, first_o)
+                        ls = ls + loss_m
+                    else:
+                        cot = jax.lax.dynamic_index_in_dim(
+                            Q, row[sir.COL_B], 0, keepdims=False)
+                    _, vjp_q = jax.vjp(stage_fn, W, x)
+                    gw, gx = vjp_q((cot, jnp.ones((), jnp.float32)))
+                    gs = tuple(
+                        first_or_add(t, gw, first_g) if i == q else t
+                        for i, t in enumerate(gs))
+                    if q == 0:
+                        _, evjp = jax.vjp(lambda o: model.embed(o, mb(m)),
+                                          Wo)
+                        (go_embed,) = evjp(gx)
+                        # with C == 1 the head already contributed in
+                        # this same event, so the embed grad always adds
+                        fo = first_o if C > 1 else \
+                            jnp.zeros((), jnp.bool_)
+                        go = first_or_add(go, go_embed, fo)
+                    else:
+                        Q = jax.lax.dynamic_update_index_in_dim(
+                            Q, gx, row[sir.COL_C], 0)
+                    return (P, Q, gs, go, ls)
+                return br
+
+            branches = [fwd_branch(q, s) if kind == "fwd"
+                        else bwd_branch(q, s)
+                        for kind, q, s in table.branches]
+
+            def body(carry, row):
+                return jax.lax.switch(row[sir.COL_BRANCH], branches,
+                                      carry, row), None
+
+            carry0 = (
+                jnp.zeros((table.n_val_slots,) + x_sd.shape, x_sd.dtype),
+                jnp.zeros((max(table.n_cot_slots, 1),) + x_sd.shape,
+                          x_sd.dtype),
+                jax.tree.map(jnp.zeros_like, params["stages"]),
+                jax.tree.map(jnp.zeros_like, params["outer"]),
+                jnp.zeros((), loss_sd.dtype),
+            )
+            (_, _, g_chunks, g_outer, loss_sum), _ = jax.lax.scan(
+                body, carry0, jnp.asarray(table.rows))
+            return g_outer, g_chunks, loss_sum / M
+
+        g_outer, g_chunks, loss = (scan_round if backend == "scan"
+                                   else unrolled_round)()
         grads = {"outer": g_outer, "stages": tuple(g_chunks)}
         grads = jax.tree.map(lambda g: g / M, grads)
         if clip:
@@ -661,7 +790,6 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
         }
         if two_buf:
             new_state["stash"] = {"params": params, "momentum": mom}
-        loss = sum(losses) / len(losses)
         return new_state, {"loss": loss,
                            "loss_valid": jnp.ones((), jnp.float32)}
 

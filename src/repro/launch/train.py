@@ -13,7 +13,10 @@ Example (the 8-deliverable end-to-end run):
 ``--schedule {stream,gpipe,1f1b,2bw,interleaved}`` selects the pipeline
 schedule (round schedules run through the IR interpreter, one flush
 round / 2BW group per step); ``--virtual-stages v`` gives each device v
-chunk-stages under ``--schedule interleaved``.  See docs/SCHEDULES.md.
+chunk-stages under ``--schedule interleaved``; ``--ir-backend
+{scan,unrolled}`` picks the interpreter's round body (the default scan
+backend keeps trace size O(1) in the round's microbatch count).  See
+docs/SCHEDULES.md.
 
 ``--layers`` need not divide ``--pipe``: stage params are ragged
 per-stage trees (e.g. ``--layers 7 --pipe 3`` runs sizes (3,2,2) under
@@ -91,6 +94,13 @@ def main(argv=None) -> int:
                     dest="virtual_stages",
                     help="chunks per device for --schedule interleaved "
                          "(v >= 2 shrinks the flush bubble ~v x)")
+    ap.add_argument("--ir-backend", default="scan", dest="ir_backend",
+                    choices=pipeline_stream.IR_BACKENDS,
+                    help="round-body construction for IR schedules: "
+                         "'scan' compiles a lax.scan over the plan's "
+                         "event table (O(1) trace size in the round's "
+                         "microbatch count), 'unrolled' inlines every "
+                         "event (the reference oracle)")
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
@@ -191,7 +201,8 @@ def main(argv=None) -> int:
             model, model.init(key), batch_sds, plan=pplan, mode=args.mode)
         step_fn = pipeline_stream.make_ir_train_step(
             model, plan=pplan, mode=args.mode, lr=args.lr,
-            gamma=args.gamma, clip=args.clip or None)
+            gamma=args.gamma, clip=args.clip or None,
+            backend=args.ir_backend)
     else:
         state = pipeline_stream.init_state(
             model, key, batch_sds, mode=args.mode,

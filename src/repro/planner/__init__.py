@@ -49,10 +49,11 @@ from repro.planner.partition import (Partition, dp_split,
                                      profile_stage_costs, uniform)
 from repro.planner.profiler import (LayerProfile, ModelProfile,
                                     profile_model, synthetic_profile)
-from repro.planner.schedule_ir import (Event, Schedule, emit, gpipe,
+from repro.planner.schedule_ir import (Event, EventTable, Schedule,
+                                       compile_event_table, emit, gpipe,
                                        interleaved_1f1b, one_f_one_b,
-                                       pipedream_2bw, round_robin_1f1b,
-                                       streaming)
+                                       pipedream_2bw, round_compute_program,
+                                       round_robin_1f1b, streaming)
 
 __all__ = [
     "PipelinePlan", "SCHEDULES", "ROUND_SCHEDULES", "plan",
@@ -61,4 +62,5 @@ __all__ = [
     "LayerProfile", "ModelProfile", "profile_model", "synthetic_profile",
     "Event", "Schedule", "emit", "gpipe", "round_robin_1f1b", "streaming",
     "one_f_one_b", "pipedream_2bw", "interleaved_1f1b",
+    "EventTable", "compile_event_table", "round_compute_program",
 ]

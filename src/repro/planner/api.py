@@ -99,6 +99,41 @@ class PipelinePlan:
         """In-flight slots the streaming runtime must hold."""
         return max(max(self.bwd_lag), max(self.fb_gap)) + 1
 
+    # ---------------------------------------------- round-schedule lowering
+    def round_ir(self) -> ir.Schedule:
+        """The schedule timeline backing this plan — ``self.ir``, or a
+        deterministic re-emission when the plan was built with
+        ``keep_ir=False`` (same emitter, same kwargs)."""
+        if self.ir is not None:
+            return self.ir
+        kw = {}
+        if self.schedule == "interleaved":
+            kw["v"] = self.virtual_stages
+        if self.round_microbatches:
+            kw["n_microbatches"] = self.round_microbatches
+        return ir.emit(self.schedule, self.n_stages, **kw)
+
+    def round_program(self):
+        """One canonical round of compute events ``(kind, local_mb,
+        chunk_stage, s)`` in timeline order (round schedules only).
+
+        Flush schedules lower round 0 — every round is identical; 2BW
+        lowers a steady accumulation group (group 0's pinned reads are
+        still truncated to the initial weights)."""
+        if self.schedule not in ROUND_SCHEDULES:
+            raise ValueError(
+                f"{self.schedule!r} is not a round schedule; only "
+                f"{ROUND_SCHEDULES} lower to a round program")
+        base = self.round_microbatches if self.schedule == "2bw" else 0
+        return ir.round_compute_program(self.round_ir(), base=base)
+
+    def event_table(self) -> ir.EventTable:
+        """Dense int32 lowering of :meth:`round_program` — what the
+        ``lax.scan`` interpreter backend executes (O(1) trace size in
+        the round's microbatch count)."""
+        return ir.compile_event_table(self.round_program(), self.n_chunks,
+                                      self.round_microbatches)
+
     def summary(self) -> str:
         v = (f" v={self.virtual_stages}" if self.virtual_stages > 1 else "")
         return (f"plan[{self.schedule} x{self.n_stages}{v} "

@@ -42,11 +42,23 @@ specific weight version rather than "whatever is current" — 2BW's
 double-buffering is expressed this way, and the required weight-stash
 ring depth per stage is derived (:meth:`Schedule.weight_stash_depth`)
 instead of hardcoded.
+
+Besides the event-object timeline, this module can **lower** one round
+of a schedule to a dense, array-encoded :class:`EventTable`
+(:func:`round_compute_program` → :func:`compile_event_table`): int32
+columns carrying opcode, chunk-stage, microbatch slot, weight-version
+lag and register-allocated activation/cotangent buffer slots.  The
+table is what ``core/pipeline_stream.py``'s ``lax.scan`` interpreter
+backend consumes — trace size O(#distinct branch bodies) instead of
+O(M·C) unrolled events.
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 FWD, BWD, UPDATE = "fwd", "bwd", "update"
 _KIND_RANK = {FWD: 0, BWD: 1, UPDATE: 2}
@@ -629,3 +641,186 @@ def emit(name: str, n_stages: int, **kw) -> Schedule:
     if name not in EMITTERS:
         raise KeyError(f"unknown schedule {name!r}; known: {sorted(EMITTERS)}")
     return EMITTERS[name](n_stages, **kw)
+
+
+# ===========================================================================
+# lowering: one round of compute events -> a dense int32 event table
+# ===========================================================================
+#
+# The scan interpreter in ``core/pipeline_stream.py`` executes one table
+# row per ``lax.scan`` iteration, dispatching on a *branch id* that
+# statically encodes (opcode, chunk-stage, weight-version lag) — the
+# three facts that pick a traced branch body (ragged chunk weights make
+# per-chunk dispatch unavoidable; the lag picks a predicted weight
+# tree).  Everything dynamic per event lives in int32 columns:
+
+# row columns (COL_* indices into EventTable.rows[i])
+COL_BRANCH = 0   # index into EventTable.branches (lax.switch arm)
+COL_OP = 1       # 0 = fwd, 1 = bwd (informational: branch id implies it)
+COL_CHUNK = 2    # chunk-stage q (informational: branch id implies it)
+COL_MB = 3       # microbatch slot m within the round, 0..M-1
+COL_WV = 4       # weight-version lag s of the event's read (in branch id)
+COL_A = 5        # fwd q==0: write slot of v(m,0) (the embed output)
+#                  fwd q>0:  read slot of v(m,q) (the chunk input)
+#                  bwd:      read slot of v(m,q) (the stashed activation)
+COL_B = 6        # fwd:       write slot of v(m,q+1) (the chunk output)
+#                  bwd q==C-1: read slot of v(m,C) (the head input)
+#                  bwd q<C-1:  read cot slot of c(m,q+1) (output cotangent)
+COL_C = 7        # bwd q>0: write cot slot of c(m,q); else -1
+COL_FIRST_G = 8  # 1 iff this bwd event is chunk q's first grad contribution
+COL_FIRST_O = 9  # 1 iff this event is the first outer-grad contribution
+N_COLS = 10
+
+OP_FWD, OP_BWD = 0, 1
+
+
+@dataclass(frozen=True, eq=False)
+class EventTable:
+    """Dense array encoding of one schedule round.
+
+    ``branches[b] = (kind, chunk_stage, wv_lag)`` — the static facts a
+    ``lax.switch`` arm closes over; ``rows`` is ``[2·M·C, N_COLS]``
+    int32 (column semantics above).  Buffer slots are register-allocated
+    over the round (greedy lowest-free-slot over value lifetimes), so
+    ``n_val_slots`` / ``n_cot_slots`` are the schedule's true peak
+    in-flight activation / cotangent counts — buffer memory is set by
+    the schedule, trace size by ``len(branches)`` (≤ 2·C, independent
+    of M).
+
+    Value naming: ``v(m, q)`` is microbatch m's input to chunk q (the
+    embed output for q = 0) for q in 0..C-1, and ``v(m, C)`` the last
+    chunk's output consumed by the loss head; ``c(m, q)`` is the
+    cotangent w.r.t. ``v(m, q)``, buffered only for 0 < q < C (the head
+    produces c(m, C) in-branch; the embed backward consumes c(m, 0)
+    in-branch).
+    """
+    n_chunks: int
+    n_microbatches: int
+    branches: Tuple[Tuple[str, int, int], ...]
+    rows: np.ndarray
+    n_val_slots: int
+    n_cot_slots: int
+
+    def __post_init__(self):
+        self.rows.setflags(write=False)
+
+
+def round_compute_program(sched: Schedule, *, base: int = 0
+                          ) -> List[Tuple[str, int, int, int]]:
+    """One round's compute events ``(kind, local_mb, chunk_stage, s)``
+    in timeline order, with ``s`` the IR-derived weight-version lag of
+    each event's read (the generic SpecTrain prediction distance).
+
+    ``base`` selects the round's first minibatch: flush schedules repeat
+    identically from round 0, 2BW's group 0 still reads the initial
+    weights (warm-up truncation), so its callers pass ``base = m`` to
+    lower a steady group.
+    """
+    M = sched.round_microbatches
+    if M < 1:
+        raise ValueError(
+            f"{sched.name}: not a round schedule (round_microbatches={M})")
+    prog = []
+    for e in sched.events:
+        if e.kind == UPDATE or not base <= e.mb < base + M:
+            continue
+        phase = "forward" if e.kind == FWD else "backward"
+        prog.append((e.kind, e.mb - base, e.stage,
+                     sched.staleness(e.stage, phase, e.mb)))
+    want = 2 * M * sched.n_stages
+    if len(prog) != want:
+        raise ValueError(
+            f"{sched.name}: round at base {base} has {len(prog)} compute "
+            f"events, expected {want}")
+    return prog
+
+
+def compile_event_table(prog: List[Tuple[str, int, int, int]],
+                        n_chunks: int, n_microbatches: int) -> EventTable:
+    """Lower a round program (:func:`round_compute_program`) to an
+    :class:`EventTable`.
+
+    Walks the program once, allocating buffer slots over value
+    lifetimes: ``v(m, q)`` is born at its producing forward and dies at
+    chunk q's backward (the head input ``v(m, C)`` at chunk C-1's
+    backward); ``c(m, q)`` is born at chunk q's backward and dies at
+    chunk q-1's.  Slots freed by an event may be reused by the same
+    event's write — the interpreter reads all inputs before writing.
+    """
+    C, M = n_chunks, n_microbatches
+    if len(prog) != 2 * M * C:
+        raise ValueError(f"program has {len(prog)} events, expected "
+                         f"{2 * M * C} (= 2·{M}·{C})")
+    specs: List[Tuple[str, int, int]] = []
+    spec_ix: Dict[Tuple[str, int, int], int] = {}
+    rows = []
+    val_slot: Dict[Tuple[int, int], int] = {}
+    cot_slot: Dict[Tuple[int, int], int] = {}
+    free: List[List[int]] = [[], []]      # min-heaps: [values, cotangents]
+    hwm = [0, 0]                          # slot high-water marks
+
+    def alloc(pool: int) -> int:
+        if free[pool]:
+            return heapq.heappop(free[pool])
+        hwm[pool] += 1
+        return hwm[pool] - 1
+
+    seen_g = set()
+    outer_seen = False
+    for kind, m, q, s in prog:
+        if not (0 <= m < M and 0 <= q < C):
+            raise ValueError(f"event ({kind},{m},{q}) out of range for "
+                             f"M={M}, C={C}")
+        key = (kind, q, s)
+        if key not in spec_ix:
+            spec_ix[key] = len(specs)
+            specs.append(key)
+        fg = fo = 0
+        if kind == FWD:
+            op = OP_FWD
+            if (m, q + 1) in val_slot:
+                raise ValueError(f"fwd({m},{q}) emitted twice")
+            if q == 0:
+                a = alloc(0)
+                val_slot[(m, 0)] = a
+            else:
+                if (m, q) not in val_slot:
+                    raise ValueError(f"fwd({m},{q}) before fwd({m},{q-1})")
+                a = val_slot[(m, q)]
+            b = alloc(0)
+            val_slot[(m, q + 1)] = b
+            c = -1
+        else:
+            op = OP_BWD
+            if (m, q) not in val_slot:
+                raise ValueError(f"bwd({m},{q}) before fwd({m},{q}) or "
+                                 f"emitted twice")
+            a = val_slot.pop((m, q))
+            heapq.heappush(free[0], a)
+            if q == C - 1:
+                b = val_slot.pop((m, C))
+                heapq.heappush(free[0], b)
+            else:
+                if (m, q + 1) not in cot_slot:
+                    raise ValueError(f"bwd({m},{q}) before bwd({m},{q+1})")
+                b = cot_slot.pop((m, q + 1))
+                heapq.heappush(free[1], b)
+            c = -1
+            if q > 0:
+                c = alloc(1)
+                cot_slot[(m, q)] = c
+            if q not in seen_g:
+                seen_g.add(q)
+                fg = 1
+            if (q == C - 1 or q == 0) and not outer_seen:
+                outer_seen = True
+                fo = 1
+        rows.append((spec_ix[key], op, q, m, s, a, b, c, fg, fo))
+    if val_slot or cot_slot:
+        raise ValueError(
+            f"round leaves in-flight values: "
+            f"{sorted(val_slot) + sorted(cot_slot)}")
+    return EventTable(
+        n_chunks=C, n_microbatches=M, branches=tuple(specs),
+        rows=np.asarray(rows, np.int32),
+        n_val_slots=hwm[0], n_cot_slots=hwm[1])

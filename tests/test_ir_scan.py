@@ -1,0 +1,234 @@
+"""Scan-compiled IR interpreter: O(1) trace size + bit-identity oracle.
+
+Three layers of evidence for ``backend="scan"`` in
+``core/pipeline_stream.make_ir_train_step``:
+
+  * **Event table** — lowering one round to the dense int32
+    :class:`~repro.planner.schedule_ir.EventTable` is structurally
+    sound: every compute event becomes a row, the lax.switch branch set
+    is bounded by 2·n_chunks, register-allocated buffer slots balance
+    (every value written is read and freed), and the weight-version lag
+    column reproduces the schedule family's staleness (0 for flush
+    schedules, 1 for 2BW).
+  * **Bit identity** — the scan backend is bitwise identical to the
+    unrolled reference oracle (losses and every state leaf) over
+    {1f1b, 2bw, interleaved, gpipe} × S ∈ {2, 3} × ragged DP
+    partitions, in spectrain and pipedream modes.
+  * **Trace size** — the scan round body's jaxpr equation count is the
+    same for M = 4 and M = 32 (O(1) in the round's microbatch count),
+    while the unrolled body's grows with M.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from conftest import lm_batch, tiny_cfg
+from repro.core import pipeline_stream
+from repro.models import Model
+from repro.planner import plan, synthetic_profile
+from repro.planner import schedule_ir as sir
+
+
+def _skew(L):
+    # front-loaded cost: the DP partitioner provably deviates from the
+    # uniform split, so the sweep runs ragged chunk trees
+    return [9.0] + [1.0] * (L - 1)
+
+
+def _mk_plan(schedule, S, v=1, M=4, L=4):
+    return plan(profile=synthetic_profile(_skew(L)), n_stages=S,
+                schedule=schedule, virtual_stages=v, n_microbatches=M)
+
+
+# ===========================================================================
+# event-table lowering
+# ===========================================================================
+
+
+class TestEventTable:
+    @pytest.mark.parametrize("schedule,S,v,M", [
+        ("1f1b", 2, 1, 4), ("1f1b", 4, 1, 8), ("gpipe", 3, 1, 6),
+        ("2bw", 3, 1, 6), ("interleaved", 2, 2, 4),
+    ])
+    def test_structure(self, schedule, S, v, M):
+        p = _mk_plan(schedule, S, v=v, M=M, L=S * v)
+        t = p.event_table()
+        C = p.n_chunks
+        assert t.rows.shape == (2 * M * C, sir.N_COLS)
+        assert t.rows.dtype == np.int32
+        assert len(t.branches) <= 2 * C
+        # every chunk appears as both a fwd and a bwd branch
+        assert {(k, q) for k, q, _s in t.branches} == \
+            {(k, q) for k in (sir.FWD, sir.BWD) for q in range(C)}
+        # slot columns index into the pools the table declares
+        rows = t.rows
+        fwd = rows[rows[:, sir.COL_OP] == sir.OP_FWD]
+        bwd = rows[rows[:, sir.COL_OP] == sir.OP_BWD]
+        assert len(fwd) == len(bwd) == M * C
+        assert (fwd[:, sir.COL_A] >= 0).all()
+        assert (fwd[:, sir.COL_B] < t.n_val_slots).all()
+        assert (fwd[:, sir.COL_C] == -1).all()
+        inner_bwd = bwd[bwd[:, sir.COL_CHUNK] > 0]
+        if len(inner_bwd):
+            assert (inner_bwd[:, sir.COL_C] >= 0).all()
+            assert (inner_bwd[:, sir.COL_C] < t.n_cot_slots).all()
+        assert (bwd[bwd[:, sir.COL_CHUNK] == 0][:, sir.COL_C] == -1).all()
+        # exactly one first-contribution marker per chunk / per outer
+        assert bwd[:, sir.COL_FIRST_G].sum() == C
+        assert rows[:, sir.COL_FIRST_O].sum() == 1
+
+    def test_wv_column_matches_schedule_family(self):
+        flush = _mk_plan("1f1b", 2).event_table()
+        assert (flush.rows[:, sir.COL_WV] == 0).all()
+        twobw = _mk_plan("2bw", 2).event_table()
+        assert (twobw.rows[:, sir.COL_WV] == 1).all()
+
+    def test_deterministic(self):
+        a = _mk_plan("1f1b", 3, M=6).event_table()
+        b = _mk_plan("1f1b", 3, M=6).event_table()
+        assert a.branches == b.branches
+        np.testing.assert_array_equal(a.rows, b.rows)
+
+    def test_slot_pool_tracks_schedule_stash(self):
+        # the value pool holds at least the schedule's peak per-stage
+        # activation stash and never more than the whole round
+        p = _mk_plan("1f1b", 4, M=8)
+        t = p.event_table()
+        assert max(p.act_stash) <= t.n_val_slots <= 2 * 8 * 4
+
+    def test_unbalanced_program_rejected(self):
+        prog = _mk_plan("1f1b", 2).round_program()
+        with pytest.raises(ValueError, match="expected"):
+            sir.compile_event_table(prog[:-1], 2, 4)
+        # dataflow violations are caught, not silently mis-slotted
+        bad = [e for e in prog if not (e[0] == sir.BWD and e[2] == 1
+                                       and e[1] == 0)]
+        with pytest.raises(ValueError, match="bwd"):
+            sir.compile_event_table(
+                bad + [(sir.BWD, 0, 1, 0)], 2, 4)
+
+
+# ===========================================================================
+# bit identity vs the unrolled oracle
+# ===========================================================================
+
+
+class TestScanBitIdentity:
+    def _run(self, p, mode, steps=2, batch=8, lr=0.05):
+        cfg = tiny_cfg("granite-8b", n_layers=p.partition.n_layers,
+                       pipe=p.n_stages)
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        data = lm_batch(jax.random.PRNGKey(1), cfg, batch=batch, seq=8)
+        out = {}
+        for backend in pipeline_stream.IR_BACKENDS:
+            state = pipeline_stream.make_ir_state(m, params, None, plan=p,
+                                                  mode=mode)
+            step = jax.jit(pipeline_stream.make_ir_train_step(
+                m, plan=p, mode=mode, lr=lr, backend=backend))
+            losses = []
+            for _ in range(steps):
+                state, met = step(state, data)
+                losses.append(np.asarray(met["loss"]))
+            out[backend] = (losses, state)
+        return out
+
+    @pytest.mark.parametrize("schedule,S,v,M,L", [
+        ("1f1b", 2, 1, 4, 4),
+        ("1f1b", 3, 1, 3, 5),
+        ("2bw", 2, 1, 4, 4),
+        ("2bw", 3, 1, 3, 5),
+        ("interleaved", 2, 2, 4, 4),
+        ("interleaved", 3, 2, 3, 6),
+        ("gpipe", 2, 1, 4, 4),
+    ])
+    def test_scan_matches_unrolled_bitwise(self, schedule, S, v, M, L):
+        """The acceptance criterion: ragged DP-partitioned plans execute
+        bit-for-bit identically through both round bodies."""
+        p = _mk_plan(schedule, S, v=v, M=M, L=L)
+        if v == 1 and schedule != "gpipe":
+            assert len(set(p.partition.sizes())) > 1, \
+                "sweep must exercise a ragged partition"
+        out = self._run(p, "spectrain", batch=2 * M)
+        (lu, su), (ls, ss) = out["unrolled"], out["scan"]
+        for a, b in zip(lu, ls):
+            assert a.tobytes() == b.tobytes(), (a, b)
+        ju, js = jax.tree.leaves(su), jax.tree.leaves(ss)
+        assert len(ju) == len(js)
+        for a, b in zip(ju, js):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_2bw_pipedream_mode_bitwise(self):
+        """The raw double-buffer read path (no prediction) is also
+        bit-identical."""
+        p = _mk_plan("2bw", 2)
+        out = self._run(p, "pipedream")
+        (lu, su), (ls, ss) = out["unrolled"], out["scan"]
+        assert [a.tobytes() for a in lu] == [a.tobytes() for a in ls]
+        for a, b in zip(jax.tree.leaves(su), jax.tree.leaves(ss)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_unknown_backend_rejected(self):
+        p = _mk_plan("1f1b", 2)
+        cfg = tiny_cfg("granite-8b", n_layers=4, pipe=2)
+        m = Model(cfg)
+        with pytest.raises(ValueError, match="backend"):
+            pipeline_stream.make_ir_train_step(
+                m, plan=p, mode="spectrain", lr=0.05, backend="eager")
+
+
+# ===========================================================================
+# trace size
+# ===========================================================================
+
+
+# the one recursive jaxpr-equation counter (sub-jaxprs: scan bodies,
+# switch branches, custom-vjp calls, ...) — shared with the benchmark
+# so EXPERIMENTS.md numbers and this test measure the same thing
+try:
+    from benchmarks.ir_compile import _count_eqns
+except ImportError:            # bare `pytest` without repo root on sys.path
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.ir_compile import _count_eqns
+
+
+class TestTraceSize:
+    def _trace(self, backend, M):
+        p = _mk_plan("1f1b", 2, M=M)
+        cfg = tiny_cfg("granite-8b", n_layers=4, pipe=2)
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = lm_batch(jax.random.PRNGKey(1), cfg, batch=M, seq=8)
+        state = pipeline_stream.make_ir_state(m, params, None, plan=p)
+        step = pipeline_stream.make_ir_train_step(
+            m, plan=p, mode="spectrain", lr=0.05, backend=backend)
+        return _count_eqns(jax.make_jaxpr(step)(state, batch).jaxpr)
+
+    def test_scan_trace_constant_in_microbatches(self):
+        """THE property this backend exists for: the jaxpr is the same
+        size no matter how many microbatches the round runs."""
+        assert self._trace("scan", 4) == self._trace("scan", 32)
+
+    def test_unrolled_trace_grows_and_scan_beats_it(self):
+        small, big = self._trace("unrolled", 4), self._trace("unrolled", 32)
+        assert big > 4 * small          # O(M·C) growth of the oracle
+        assert self._trace("scan", 32) < small
+
+
+# ===========================================================================
+# CLI
+# ===========================================================================
+
+
+class TestCLIBackendFlag:
+    def test_unrolled_backend_trains(self):
+        from repro.launch import train
+        rc = train.main([
+            "--arch", "granite-8b", "--smoke", "--pipe", "2",
+            "--layers", "4", "--steps", "2", "--batch", "8",
+            "--seq", "16", "--log-every", "1",
+            "--schedule", "1f1b", "--ir-backend", "unrolled"])
+        assert rc == 0
