@@ -1,5 +1,10 @@
 """Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables
-from results/dryrun/cells.jsonl."""
+from results/dryrun/cells.jsonl.
+
+``--metrics PATH.jsonl`` instead renders a telemetry JSONL stream (the
+``--metrics-out`` output of ``launch/train.py`` / ``launch/serve.py``)
+as markdown: one table of train-step records plus one row per other
+structured event."""
 from __future__ import annotations
 
 import json
@@ -89,7 +94,45 @@ def summary(rows) -> str:
     return "\n".join(lines)
 
 
+def metrics_tables(path) -> str:
+    """Markdown rendering of an ``obs.MetricsRegistry`` JSONL stream."""
+    events = [json.loads(line) for line in open(path) if line.strip()]
+    steps = [e for e in events if e.get("event") == "train_step"]
+    others = [e for e in events
+              if e.get("event") not in ("train_step", "summary")]
+    summaries = [e for e in events if e.get("event") == "summary"]
+    out = [f"## Telemetry ({os.path.basename(path)})", ""]
+    if steps:
+        out += ["| step | loss | tok/s |", "|---|---|---|"]
+        out += [f"| {e['step']} | {e['loss']} | {e['tok_per_s']} |"
+                for e in steps]
+        out.append("")
+    if others:
+        out += ["| t | event | fields |", "|---|---|---|"]
+        for e in others:
+            fields = ", ".join(
+                f"{k}={v}" for k, v in e.items() if k not in ("event", "t"))
+            out.append(f"| {e['t']:.3f} | {e['event']} | {fields} |")
+        out.append("")
+    if summaries:
+        snap = summaries[-1]
+        out += ["### Final summary", "",
+                "| metric | value |", "|---|---|"]
+        for k, v in sorted(snap.get("counters", {}).items()):
+            out.append(f"| {k} | {v:g} |")
+        for k, v in sorted(snap.get("gauges", {}).items()):
+            out.append(f"| {k} | {'-' if v is None else v} |")
+        for k, h in sorted(snap.get("histograms", {}).items()):
+            if h.get("count"):
+                out.append(f"| {k} | n={h['count']} mean={h['mean']:.1f} "
+                           f"p99={h['p99']:.1f} |")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
+    if "--metrics" in sys.argv:
+        print(metrics_tables(sys.argv[sys.argv.index("--metrics") + 1]))
+        raise SystemExit(0)
     rows = load(sys.argv[1] if len(sys.argv) > 1 else DEFAULT)
     print("## Dry-run\n")
     print(summary(rows))

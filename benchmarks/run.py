@@ -25,7 +25,7 @@ def main() -> int:
 
     from benchmarks import (breakdown, comm_time, comm_volume, convergence,
                             ir_compile, kernel_bench, planner_bench, rmse,
-                            roofline, throughput)
+                            roofline, throughput, trace_overhead)
     benches = {
         "comm_volume": comm_volume.main,      # Fig. 3
         "comm_time": comm_time.main,          # Fig. 4
@@ -37,6 +37,7 @@ def main() -> int:
         "roofline": roofline.main,            # EXPERIMENTS.md §Roofline
         "planner": planner_bench.main,        # EXPERIMENTS.md §Planner
         "ir_compile": ir_compile.main,        # EXPERIMENTS.md §IR backends
+        "trace_overhead": trace_overhead.main,  # docs/OBSERVABILITY.md
     }
     picked = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

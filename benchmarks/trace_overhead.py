@@ -1,0 +1,86 @@
+"""Tracer overhead: traced vs untraced IR step wall time.
+
+The ``--trace`` instrumentation (``repro.obs.PipelineTracer``) adds one
+ordered host callback per compute event inside the jitted round body.
+This benchmark bounds its cost on the step path:
+
+Rows:
+  trace/step_off — steady step wall time, tracer off (the PR-guarantee
+                   path: byte-identical program to an untraced build);
+  trace/step_on  — same plan/model with the tracer attached; derived
+                   column reports the relative overhead.
+
+Expected shape: ``step_off`` matches the plain ``ir/scan`` step cost;
+``step_on`` pays one io_callback round-trip per event (~10s of us each
+on CPU), small relative to real layer compute and zero when ``--trace``
+is not passed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+def _steady_us(fn, state, batch, reps: int = 5) -> float:
+    import jax
+
+    jax.block_until_ready(fn(state, batch))      # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(state, batch)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main(fast: bool = True):
+    import jax
+
+    from repro.configs import get_config, smoke_config
+    from repro.core import pipeline_stream
+    from repro.models import Model
+    from repro.obs import PipelineTracer
+    from repro.planner import plan, synthetic_profile
+
+    cfg = smoke_config(get_config("granite-8b"))
+    cfg = cfg.replace(
+        n_layers=4,
+        mesh_plan=dataclasses.replace(cfg.mesh_plan, pipe=2),
+        param_dtype="float32", compute_dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    M = 4 if fast else 16
+    p = plan(profile=synthetic_profile([1.0] * cfg.n_layers),
+             n_stages=2, schedule="1f1b", n_microbatches=M)
+    k = jax.random.PRNGKey(1)
+    batch = {
+        "tokens": jax.random.randint(k, (M, 16), 0, cfg.vocab_size),
+        "targets": jax.random.randint(k, (M, 16), 0, cfg.vocab_size),
+    }
+
+    # no donation here (unlike the train driver): state is reused across
+    # reps so the loop times the step alone, not state reconstruction
+    def fresh_state():
+        copies = jax.tree.map(lambda x: x.copy(), params)
+        return pipeline_stream.make_ir_state(model, copies, None, plan=p)
+
+    step_off = jax.jit(pipeline_stream.make_ir_train_step(
+        model, plan=p, mode="spectrain", lr=0.05, backend="scan"))
+    us_off = _steady_us(step_off, fresh_state(), batch)
+
+    tracer = PipelineTracer(p)
+    step_on = tracer.wrap_step(jax.jit(pipeline_stream.make_ir_train_step(
+        model, plan=p, mode="spectrain", lr=0.05, backend="scan",
+        tracer=tracer)))
+    us_on = _steady_us(step_on, fresh_state(), batch)
+
+    pct = (us_on / us_off - 1.0) * 100.0
+    return [
+        f"trace/step_off,{us_off:.0f},M={M}",
+        f"trace/step_on,{us_on:.0f},overhead_pct={pct:.1f};M={M};"
+        f"rounds={len(tracer.rounds)}",
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

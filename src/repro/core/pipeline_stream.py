@@ -65,6 +65,7 @@ trees; device d of the S devices hosts chunks ``d, d+S, …``
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -437,6 +438,24 @@ from repro.planner.schedule_ir import ROUND_SCHEDULES as IR_SCHEDULES  # noqa: E
 IR_BACKENDS = ("scan", "unrolled")
 
 
+def _trace_mark(tracer, dep):
+    """Ordered host callback attributing wall time to the just-computed
+    event (``repro.obs.trace.PipelineTracer._mark``).
+
+    The callback token carries a data dependence on the event's output,
+    so the mark cannot be scheduled before the compute it brackets; with
+    ``ordered=True`` the callbacks fire in program order — which is the
+    IR's timeline order, so the tracer indexes events by arrival.  Only
+    reached when a tracer is installed: the tracer-less trace/jaxpr is
+    byte-identical to the uninstrumented interpreter.
+    """
+    from jax.experimental import io_callback
+
+    leaf = jax.tree.leaves(dep)[0]
+    tok = jnp.ravel(leaf)[0]
+    io_callback(lambda _t: tracer._mark(), None, tok, ordered=True)
+
+
 def _ir_plan_check(model, plan) -> Tuple[int, ...]:
     """Validate a plan as an executable artifact for the IR interpreter;
     returns the per-chunk layer counts."""
@@ -522,7 +541,7 @@ def make_ir_state(model, params, batch_sds, *, plan,
 
 def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
                        gamma: float = 0.9, clip: Optional[float] = None,
-                       backend: str = "scan") -> Callable:
+                       backend: str = "scan", tracer=None) -> Callable:
     """Schedule-driven step: one call executes one flush round (gpipe /
     1f1b / interleaved) or one 2BW accumulation group of
     ``plan.round_microbatches`` microbatches, by interpreting the IR's
@@ -555,6 +574,13 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
 
     Both backends accumulate gradients, losses and the outer tree in
     the same timeline order, so they are bitwise interchangeable.
+
+    ``tracer`` (a ``repro.obs.trace.PipelineTracer``) instruments the
+    round: the unrolled body wraps every event in a ``jax.named_scope``
+    and both bodies end each event with an ordered host-timestamp
+    callback (``_trace_mark``), which the tracer turns into per-(device,
+    event) spans.  ``tracer=None`` (the default) adds nothing to the
+    trace — the step stays byte-identical to the untraced interpreter.
     """
     assert mode in MODES, mode
     if backend not in IR_BACKENDS:
@@ -628,34 +654,43 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
                 return g if a is None else jax.tree.map(jnp.add, a, g)
 
             for kind, m, q, s in prog:
-                if kind == "fwd":
-                    x = model.embed(outer_w(s), mb(m)) if q == 0 \
-                        else outs.pop((m, q - 1))
-                    acts[(m, q)] = x
-                    out, _aux = stage_fn(chunk_w(q, s), x)
-                    outs[(m, q)] = out
-                else:
-                    if q == C - 1:
-                        tgt = mb(m)["targets"]
-                        loss_m, head_vjp = jax.vjp(
-                            lambda o, xl: model.head_loss(o, xl, tgt),
-                            outer_w(s), outs.pop((m, q)))
-                        go_head, cot = head_vjp(jnp.ones((), loss_m.dtype))
-                        g_outer = acc(g_outer, go_head)
-                        losses.append(loss_m)
+                scope = (jax.named_scope(f"{kind}/m{m}/q{q}/s{s}")
+                         if tracer is not None else contextlib.nullcontext())
+                with scope:
+                    if kind == "fwd":
+                        x = model.embed(outer_w(s), mb(m)) if q == 0 \
+                            else outs.pop((m, q - 1))
+                        acts[(m, q)] = x
+                        out, _aux = stage_fn(chunk_w(q, s), x)
+                        outs[(m, q)] = out
+                        dep = out
                     else:
-                        cot = cots.pop((m, q + 1))
-                    _, vjp_q = jax.vjp(stage_fn, chunk_w(q, s),
-                                       acts.pop((m, q)))
-                    gw, gx = vjp_q((cot, jnp.ones((), jnp.float32)))
-                    g_chunks[q] = acc(g_chunks[q], gw)
-                    if q == 0:
-                        _, evjp = jax.vjp(lambda o: model.embed(o, mb(m)),
-                                          outer_w(s))
-                        (go_embed,) = evjp(gx)
-                        g_outer = acc(g_outer, go_embed)
-                    else:
-                        cots[(m, q)] = gx
+                        if q == C - 1:
+                            tgt = mb(m)["targets"]
+                            loss_m, head_vjp = jax.vjp(
+                                lambda o, xl: model.head_loss(o, xl, tgt),
+                                outer_w(s), outs.pop((m, q)))
+                            go_head, cot = head_vjp(
+                                jnp.ones((), loss_m.dtype))
+                            g_outer = acc(g_outer, go_head)
+                            losses.append(loss_m)
+                        else:
+                            cot = cots.pop((m, q + 1))
+                        _, vjp_q = jax.vjp(stage_fn, chunk_w(q, s),
+                                           acts.pop((m, q)))
+                        gw, gx = vjp_q((cot, jnp.ones((), jnp.float32)))
+                        g_chunks[q] = acc(g_chunks[q], gw)
+                        if q == 0:
+                            _, evjp = jax.vjp(
+                                lambda o: model.embed(o, mb(m)),
+                                outer_w(s))
+                            (go_embed,) = evjp(gx)
+                            g_outer = acc(g_outer, go_embed)
+                        else:
+                            cots[(m, q)] = gx
+                        dep = gx
+                if tracer is not None:
+                    _trace_mark(tracer, dep)
             if acts or outs or cots:
                 raise ValueError(
                     f"{plan.schedule!r} round program (round size {M}) "
@@ -760,8 +795,17 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
                         for kind, q, s in table.branches]
 
             def body(carry, row):
-                return jax.lax.switch(row[sir.COL_BRANCH], branches,
-                                      carry, row), None
+                carry = jax.lax.switch(row[sir.COL_BRANCH], branches,
+                                       carry, row)
+                if tracer is not None:
+                    # token touches both pools and the loss accumulator
+                    # so the mark trails this row's writes
+                    P, Q, _gs, _go, ls = carry
+                    _trace_mark(
+                        tracer,
+                        ls + (P.ravel()[0] + Q.ravel()[0]).astype(ls.dtype)
+                        * 0)
+                return carry, None
 
             carry0 = (
                 jnp.zeros((table.n_val_slots,) + x_sd.shape, x_sd.dtype),

@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.models import Model
+from repro.obs import MetricsRegistry
 
 
 def main(argv=None) -> int:
@@ -24,8 +25,15 @@ def main(argv=None) -> int:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--greedy", action="store_true")
+    ap.add_argument("--metrics-out", default="", dest="metrics_out",
+                    help="append request/latency telemetry JSONL to this "
+                         "path (per-token decode latency histogram)")
     args = ap.parse_args(argv)
 
+    registry = MetricsRegistry(jsonl_path=args.metrics_out or None)
+    if args.metrics_out:
+        from repro.kernels import ops as kernel_ops
+        kernel_ops.set_timing_hook(registry.kernel_hook())
     cfg = smoke_config(get_config(args.arch))
     model = Model(cfg)
     key = jax.random.PRNGKey(args.seed)
@@ -48,17 +56,29 @@ def main(argv=None) -> int:
                                jnp.asarray(p, jnp.int32))
     prefill_s = time.time() - t0
 
+    tok_hist = registry.histogram("serve/decode_token_ms")
     out = []
     t0 = time.time()
     last = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None]
     for g in range(args.gen):
         out.append(np.asarray(last))
+        tt = time.time()
         logits, cache = decode(params, cache, last.astype(jnp.int32),
                                jnp.asarray(args.prompt_len + g, jnp.int32))
         last = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None]
+        jax.block_until_ready(last)
+        tok_hist.observe((time.time() - tt) * 1e3)
     decode_s = time.time() - t0
 
     toks = np.concatenate(out, axis=1)
+    registry.gauge("serve/prefill_tok_per_s").set(
+        args.prompt_len * B / prefill_s)
+    registry.gauge("serve/decode_tok_per_s").set(args.gen * B / decode_s)
+    registry.emit("serve_request", arch=cfg.name, batch=B,
+                  prompt_len=args.prompt_len, gen=args.gen,
+                  prefill_s=prefill_s, decode_s=decode_s,
+                  decode_token_ms=tok_hist.snapshot())
+    registry.close()
     print(f"arch={cfg.name} batch={B} prompt={args.prompt_len} "
           f"gen={args.gen}")
     print(f"prefill: {args.prompt_len * B / prefill_s:.1f} tok/s   "

@@ -41,6 +41,9 @@ from repro.configs.base import MeshPlan
 from repro.core import pipeline_stream, pipeline_sync
 from repro.data import DataConfig, SyntheticLM
 from repro.models import Model
+from repro.obs import (MetricsRegistry, PipelineTracer, drift_report,
+                       format_drift, format_step, probe_stage_costs,
+                       write_trace)
 from repro.optim import compression, sgd
 from repro.planner import check_against_closed_forms, plan as make_plan
 from repro.runtime import checkpoint as ckpt
@@ -116,6 +119,13 @@ def main(argv=None) -> int:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--json", action="store_true",
                     help="emit one JSON line per logged step")
+    ap.add_argument("--trace", default="",
+                    help="write a Perfetto/Chrome trace JSON (per-device "
+                         "measured + IR-predicted lanes) to this path and "
+                         "print the predicted-vs-measured drift report")
+    ap.add_argument("--metrics-out", default="", dest="metrics_out",
+                    help="append structured JSONL telemetry (step records, "
+                         "heartbeat/restate events, summary) to this path")
     args = ap.parse_args(argv)
 
     cfg = build(args)
@@ -137,6 +147,11 @@ def main(argv=None) -> int:
         raise SystemExit(
             f"--mode sync runs the fill/drain pipeline and cannot honor "
             f"--schedule {args.schedule}; drop one of the two flags")
+    if args.trace and args.mode == "sync":
+        raise SystemExit("--trace instruments the streaming/IR runtimes; "
+                         "--mode sync is not traceable")
+    if args.trace and args.pipe < 2:
+        raise SystemExit("--trace needs a real pipeline (--pipe >= 2)")
     if args.virtual_stages > 1 and args.schedule != "interleaved":
         raise SystemExit(
             f"--virtual-stages {args.virtual_stages} requires "
@@ -190,6 +205,12 @@ def main(argv=None) -> int:
               f"act_stash={pplan.act_stash}, "
               f"w_stash_depth={pplan.w_stash_depth}")
 
+    registry = MetricsRegistry(jsonl_path=args.metrics_out or None)
+    if args.metrics_out:
+        from repro.kernels import ops as kernel_ops
+        kernel_ops.set_timing_hook(registry.kernel_hook())
+    tracer = PipelineTracer(pplan) if args.trace else None
+
     if args.mode == "sync":
         state = pipeline_sync.init_state(model, key)
         step_fn = pipeline_sync.make_train_step(
@@ -202,7 +223,7 @@ def main(argv=None) -> int:
         step_fn = pipeline_stream.make_ir_train_step(
             model, plan=pplan, mode=args.mode, lr=args.lr,
             gamma=args.gamma, clip=args.clip or None,
-            backend=args.ir_backend)
+            backend=args.ir_backend, tracer=tracer)
     else:
         state = pipeline_stream.init_state(
             model, key, batch_sds, mode=args.mode,
@@ -211,6 +232,15 @@ def main(argv=None) -> int:
             model, mode=args.mode, lr=args.lr, gamma=args.gamma,
             clip=args.clip or None, ticks_per_step=args.ticks, plan=pplan)
     step_fn = jax.jit(step_fn, donate_argnums=0)
+    if tracer is not None:
+        if schedule == "stream":
+            # the fused tick step is not separable per stage -- probe
+            # each stage's cost in isolation (PipeDream-style) for the
+            # per-device attribution in the trace and drift report
+            tracer.set_probed(probe_stage_costs(
+                model, state["params"]["stages"],
+                mb=max(1, args.batch // args.ticks), seq=args.seq))
+        step_fn = tracer.wrap_step(step_fn)
 
     start = 0
     if args.resume == "auto" and args.ckpt_dir:
@@ -228,27 +258,40 @@ def main(argv=None) -> int:
     t0 = time.time()
     tokens = 0
     bg_save = None
-    for s in range(start, args.steps):
-        batch = data.batch_at(s)
-        state, metrics = step_fn(state, batch)
-        tokens += args.batch * args.seq
-        if args.ckpt_dir and (s + 1) % args.save_every == 0:
-            if bg_save is not None:
-                bg_save.join()      # never two writers on the same dir
-            bg_save = ckpt.save(args.ckpt_dir, state, s, background=True)
-        if (s + 1) % args.log_every == 0 or s == args.steps - 1:
-            loss = float(metrics["loss"])
-            dt = time.time() - t0
-            rec = {"step": s + 1, "loss": round(loss, 4),
-                   "tok_per_s": round(tokens / max(dt, 1e-9), 1)}
-            print(json.dumps(rec) if args.json else
-                  f"step {s+1:5d}  loss {loss:.4f}  "
-                  f"tok/s {rec['tok_per_s']}")
+    interrupted = False
+    try:
+        for s in range(start, args.steps):
+            batch = data.batch_at(s)
+            state, metrics = step_fn(state, batch)
+            tokens += args.batch * args.seq
+            if args.ckpt_dir and (s + 1) % args.save_every == 0:
+                if bg_save is not None:
+                    bg_save.join()  # never two writers on the same dir
+                bg_save = ckpt.save(args.ckpt_dir, state, s,
+                                    background=True)
+            if (s + 1) % args.log_every == 0 or s == args.steps - 1:
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                rec = registry.log_step(
+                    step=s + 1, loss=round(loss, 4),
+                    tok_per_s=round(tokens / max(dt, 1e-9), 1))
+                print(json.dumps(rec) if args.json else format_step(rec))
+    except KeyboardInterrupt:
+        interrupted = True
+        print("# interrupted -- metrics flushed")
+    finally:
+        registry.close()
     if args.ckpt_dir:
         if bg_save is not None:
             bg_save.join()
-        ckpt.save(args.ckpt_dir, state, args.steps - 1)
-    return 0
+        if not interrupted:
+            ckpt.save(args.ckpt_dir, state, args.steps - 1)
+    if tracer is not None and tracer.n_steps():
+        write_trace(args.trace, tracer)
+        print(f"# trace written to {args.trace} "
+              f"({tracer.n_steps()} steps recorded)")
+        print(format_drift(drift_report(tracer)))
+    return 1 if interrupted else 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,319 @@
+"""Pipeline tracer: measured per-(device, event) spans from the runtimes.
+
+Measurement model
+-----------------
+
+The host simulator executes every pipeline "device" serially inside one
+jitted step, so wall-clock spans cannot be read off per device directly.
+The tracer therefore measures **per-event durations** and *reconstructs*
+the parallel timeline the IR describes:
+
+  * IR-interpreter runtimes (``backend="unrolled"`` and ``"scan"`` in
+    ``core/pipeline_stream.py``): every compute event ends with an
+    **ordered host callback** carrying a data dependence on that event's
+    outputs; consecutive callback timestamps attribute the round's wall
+    time to its events.  The callbacks arrive in the IR's timeline order
+    (the same order ``round_compute_program`` / the event table emit),
+    so arrival index *is* the event index.
+  * streaming runtime: one step is one fused tick over all stages — the
+    tracer records per-step wall time and attributes it across stages by
+    separately **probed** per-stage costs (:func:`probe_stage_costs`,
+    the PipeDream profile-then-attribute approach).
+
+Reconstruction lays measured durations on the IR's discrete tick grid:
+tick ``t`` starts when every device finished tick ``t-1`` (the IR's
+synchronous-time semantics), a device's events within a tick run
+back-to-back.  Realized bubble fraction, per-device busy/idle and the
+per-stage cost vector all fall out of the reconstructed spans; the
+predicted lane applies the same reconstruction to the planner's modelled
+durations (fwd = stage cost, bwd = 2x — the standard 1:2 fwd:bwd FLOP
+ratio the roofline model also uses).
+
+The first recorded round is dropped from aggregates when more than one
+exists (it pays XLA compilation).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+BWD_FWD_RATIO = 2.0     # modelled bwd/fwd cost ratio (2 matmuls vs 1)
+
+
+@dataclass(frozen=True)
+class Span:
+    """One lane-resident interval of the (re)constructed timeline."""
+    device: int          # pipe device = Perfetto lane (tid)
+    name: str            # "fwd m3 q1", "tick 7", ...
+    t0: float            # seconds from timeline origin
+    dur: float           # seconds
+    args: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def t1(self) -> float:
+        return self.t0 + self.dur
+
+
+def round_event_metas(plan) -> List[Dict[str, Any]]:
+    """Static per-event metadata for one round of an IR schedule, in the
+    exact order the interpreter executes (and the tracer's callbacks
+    arrive): ``kind``, ``mb``, ``chunk``, ``wv`` (weight-version lag),
+    ``tick`` (round-relative) and ``device``."""
+    from repro.planner import schedule_ir as sir
+
+    sched = plan.round_ir()
+    M = plan.round_microbatches
+    base = M if plan.schedule == "2bw" else 0
+    prog = plan.round_program()
+    ticks = [e.t for e in sched.events
+             if e.kind != sir.UPDATE and base <= e.mb < base + M]
+    if len(ticks) != len(prog):
+        raise ValueError(
+            f"{plan.schedule}: {len(ticks)} round events vs "
+            f"{len(prog)} program entries")
+    t0 = min(ticks)
+    D = plan.n_devices
+    return [
+        {"kind": kind, "mb": m, "chunk": q, "wv": s,
+         "tick": t - t0, "device": q % D}
+        for (kind, m, q, s), t in zip(prog, ticks)]
+
+
+def _reconstruct(metas: Sequence[Dict[str, Any]],
+                 durs: Sequence[float]) -> Tuple[List[Span], float]:
+    """Lay per-event durations on the IR tick grid (synchronous ticks,
+    back-to-back events per device within a tick).  Returns (spans,
+    makespan)."""
+    if len(metas) != len(durs):
+        raise ValueError(f"{len(durs)} durations for {len(metas)} events")
+    spans: List[Span] = []
+    cursor = 0.0
+    by_tick: Dict[int, List[int]] = {}
+    for i, m in enumerate(metas):
+        by_tick.setdefault(m["tick"], []).append(i)
+    for t in sorted(by_tick):
+        dev_off: Dict[int, float] = {}
+        for i in by_tick[t]:
+            m = metas[i]
+            off = dev_off.get(m["device"], 0.0)
+            spans.append(Span(
+                device=m["device"],
+                name=f"{m['kind']} m{m['mb']} q{m['chunk']}",
+                t0=cursor + off, dur=float(durs[i]),
+                args={"op": m["kind"], "mb": m["mb"], "chunk": m["chunk"],
+                      "wv_lag": m["wv"], "tick": t}))
+            dev_off[m["device"]] = off + float(durs[i])
+        cursor += max(dev_off.values()) if dev_off else 0.0
+    return spans, cursor
+
+
+def timeline_stats(spans: Sequence[Span], makespan: float,
+                   n_devices: int) -> Dict[str, Any]:
+    """Busy/idle accounting over a reconstructed timeline."""
+    busy = [0.0] * n_devices
+    for s in spans:
+        busy[s.device] += s.dur
+    total = n_devices * makespan
+    return {
+        "makespan_s": makespan,
+        "busy_s": busy,
+        "idle_s": [max(0.0, makespan - b) for b in busy],
+        "busy_frac": [b / makespan if makespan else 0.0 for b in busy],
+        "bubble_frac": 1.0 - (sum(busy) / total if total else 0.0),
+    }
+
+
+def probe_stage_costs(model, stage_trees, *, mb: int = 1, seq: int = 16,
+                      iters: int = 3,
+                      clock: Callable[[], float] = time.perf_counter
+                      ) -> List[float]:
+    """Measured per-stage forward wall time (jitted, warm) — the
+    streaming runtime's attribution weights and the PipeDream-style
+    realized profile a recalibration would feed back to the planner."""
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.zeros((mb, seq, model.cfg.d_model),
+                  jnp.dtype(model.cfg.compute_dtype))
+    costs = []
+    for sp in stage_trees:
+        f = jax.jit(lambda p, xx: model.stage_apply(
+            p, (xx, jnp.zeros((), jnp.float32)))[0])
+        jax.block_until_ready(f(sp, x))         # compile + warm
+        t0 = clock()
+        for _ in range(iters):
+            out = f(sp, x)
+        jax.block_until_ready(out)
+        costs.append((clock() - t0) / iters)
+    return costs
+
+
+class PipelineTracer:
+    """Collects measured event timings for one :class:`PipelinePlan`.
+
+    Usage (the ``launch/train.py --trace`` wiring)::
+
+        tracer = PipelineTracer(plan)
+        step = pipeline_stream.make_ir_train_step(..., tracer=tracer)
+        step = tracer.wrap_step(jax.jit(step, donate_argnums=0))
+        ... run steps ...
+        obs.write_trace(path, tracer)
+        print(obs.format_drift(obs.drift_report(tracer)))
+
+    ``clock`` is injectable for deterministic tests (a fake clock that
+    advances a fixed amount per call yields exactly-uniform durations).
+    """
+
+    def __init__(self, plan, *,
+                 clock: Callable[[], float] = time.perf_counter):
+        from repro.planner.api import ROUND_SCHEDULES
+
+        self.plan = plan
+        self.clock = clock
+        self.is_round = plan.schedule in ROUND_SCHEDULES
+        self.metas = round_event_metas(plan) if self.is_round else []
+        self.rounds: List[List[float]] = []   # per-round event durations
+        self.step_walls: List[float] = []     # per-step wall seconds
+        self.probed: Optional[List[float]] = None
+        self.dropped_rounds = 0               # mark-count mismatches
+        self._cur: List[float] = []
+        self._t0: Optional[float] = None
+
+    # ------------------------------------------------------ runtime hooks
+    def _mark(self) -> None:
+        """Ordered host callback target: one call per compute event, in
+        the IR's timeline order (arrival index == event index)."""
+        self._cur.append(self.clock())
+
+    def wrap_step(self, step_fn: Callable) -> Callable:
+        """Wrap a (jitted) train step with round bracketing: resets the
+        mark buffer, times the call, and files the round's durations."""
+        def traced_step(state, batch):
+            self._cur = []
+            self._t0 = self.clock()
+            out = step_fn(state, batch)
+            import jax
+            out = jax.block_until_ready(out)
+            wall = self.clock() - self._t0
+            self.step_walls.append(wall)
+            if self.is_round:
+                if len(self._cur) == len(self.metas):
+                    ts = [self._t0] + self._cur
+                    self.rounds.append(
+                        [ts[i + 1] - ts[i] for i in range(len(self._cur))])
+                elif self._cur:
+                    self.dropped_rounds += 1
+            return out
+        return traced_step
+
+    def set_probed(self, costs: Sequence[float]) -> None:
+        self.probed = [float(c) for c in costs]
+
+    # ------------------------------------------------------- aggregation
+    def _steady(self, seq: Sequence) -> Sequence:
+        """Drop the first (compiling) entry when more than one exists."""
+        return seq[1:] if len(seq) > 1 else seq
+
+    def mean_durations(self) -> List[float]:
+        """Per-event durations averaged over steady rounds (IR
+        schedules only)."""
+        rounds = self._steady(self.rounds)
+        if not rounds:
+            raise ValueError("tracer recorded no complete rounds")
+        n = len(rounds[0])
+        return [sum(r[i] for r in rounds) / len(rounds) for i in range(n)]
+
+    def n_steps(self) -> int:
+        return len(self.step_walls)
+
+    # ------------------------------------------------------- timelines
+    def measured_timeline(self) -> Tuple[List[Span], float]:
+        if self.is_round:
+            return _reconstruct(self.metas, self.mean_durations())
+        return self._stream_timeline(self._stream_weights())
+
+    def predicted_timeline(self) -> Tuple[List[Span], float]:
+        """The planner's modelled timeline on the same tick grid
+        (fwd = stage cost, bwd = ``BWD_FWD_RATIO`` x)."""
+        costs = self._plan_costs()
+        if self.is_round:
+            durs = [costs[m["chunk"]] *
+                    (1.0 if m["kind"] == "fwd" else BWD_FWD_RATIO)
+                    for m in self.metas]
+            return _reconstruct(self.metas, durs)
+        return self._stream_timeline(costs, predicted=True)
+
+    def _plan_costs(self) -> List[float]:
+        costs = list(self.plan.stage_costs_s or [])
+        if not costs or not any(costs):
+            costs = [1.0] * self.plan.n_chunks
+        return costs
+
+    def _stream_weights(self) -> List[float]:
+        if self.probed:
+            return list(self.probed)
+        return self._plan_costs()
+
+    def _stream_timeline(self, weights: Sequence[float], *,
+                         predicted: bool = False
+                         ) -> Tuple[List[Span], float]:
+        """Streaming runtime: one span per (device, step); span length
+        is the step wall scaled by that stage's share of the bottleneck
+        stage's cost (every stage runs concurrently inside the fused
+        tick, the bottleneck sets the step time)."""
+        walls = self._steady(self.step_walls)
+        if not walls:
+            raise ValueError("tracer recorded no steps")
+        if predicted:
+            # modelled step time: bottleneck stage fwd+bwd
+            walls = [max(weights) * (1.0 + BWD_FWD_RATIO)] * len(walls)
+        wmax = max(weights)
+        spans: List[Span] = []
+        cursor = 0.0
+        for t, wall in enumerate(walls):
+            for k, w in enumerate(weights):
+                spans.append(Span(
+                    device=k, name=f"tick {t} s{k}",
+                    t0=cursor, dur=wall * (w / wmax),
+                    args={"op": "tick", "tick": t, "chunk": k,
+                          "attributed": True}))
+            cursor += wall
+        return spans, cursor
+
+    # ------------------------------------------------------- measurements
+    def measured_stage_costs(self) -> List[float]:
+        """Realized per-(chunk-)stage forward cost in seconds: the mean
+        measured fwd-event duration (IR schedules) or the probed stage
+        times (streaming) — the vector a profiler recalibration feeds
+        back into ``planner.plan()``."""
+        if not self.is_round:
+            if not self.probed:
+                raise ValueError(
+                    "streaming tracer needs probe_stage_costs() results "
+                    "(tracer.set_probed) for per-stage measurements")
+            return list(self.probed)
+        durs = self.mean_durations()
+        C = self.plan.n_chunks
+        tot = [0.0] * C
+        n = [0] * C
+        for m, d in zip(self.metas, durs):
+            if m["kind"] == "fwd":
+                tot[m["chunk"]] += d
+                n[m["chunk"]] += 1
+        return [t / max(1, c) for t, c in zip(tot, n)]
+
+    def staleness_histogram(self) -> Dict[str, Dict[int, int]]:
+        """Realized weight-version-lag counts per phase, from the
+        executed events (IR schedules) or the plan vectors (stream)."""
+        out: Dict[str, Dict[int, int]] = {"fwd": {}, "bwd": {}}
+        if self.is_round:
+            for m in self.metas:
+                h = out[m["kind"]]
+                h[m["wv"]] = h.get(m["wv"], 0) + 1
+        else:
+            for s in self.plan.s_fwd:
+                out["fwd"][s] = out["fwd"].get(s, 0) + 1
+            for s in self.plan.s_bwd:
+                out["bwd"][s] = out["bwd"].get(s, 0) + 1
+        return out

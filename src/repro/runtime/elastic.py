@@ -85,7 +85,8 @@ def reshard_params(params: Dict[str, Any], *, new_pipe: int,
 
 def elastic_restate(model_old, model_new, state: Dict[str, Any],
                     batch_sds, *, mode: str = "spectrain",
-                    ticks_per_step: int = 1, plan=None) -> Dict[str, Any]:
+                    ticks_per_step: int = 1, plan=None,
+                    registry=None) -> Dict[str, Any]:
     """Full state transition between two Model instances (new mesh plan).
 
     ``plan``: optional ``repro.planner.PipelinePlan`` for the *new*
@@ -99,6 +100,10 @@ def elastic_restate(model_old, model_new, state: Dict[str, Any],
     from the carried weights).  Without a plan the new model's default
     (uniform, remainder-first) partition is used — ragged layer counts
     restate fine; the only hard error is a stage that would be empty.
+
+    ``registry``: optional ``obs.MetricsRegistry`` — the transition is
+    recorded as one ``elastic_restate`` event (old/new pipe width,
+    schedule, carried step).
     """
     from repro.core import pipeline_stream
     ir_plan = plan is not None and \
@@ -134,4 +139,10 @@ def elastic_restate(model_old, model_new, state: Dict[str, Any],
             "momentum": jax.tree.map(jnp.array, new_state["momentum"]),
         }
     new_state["step"] = state["step"]
+    if registry is not None:
+        registry.emit(
+            "elastic_restate",
+            old_pipe=model_old.n_stages, new_pipe=model_new.n_stages,
+            schedule=(plan.schedule if plan is not None else "stream"),
+            step=int(state["step"]))
     return new_state

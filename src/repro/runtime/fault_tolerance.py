@@ -57,18 +57,39 @@ def masked_gradient_mean(grad_shards: List[Any], alive: List[bool]):
 
 @dataclass
 class HeartbeatMonitor:
+    """``registry`` (an ``obs.MetricsRegistry``, optional) receives one
+    structured ``heartbeat_missed`` event per worker on the alive ->
+    overdue transition and a ``heartbeat_recovered`` event when a
+    flagged worker beats again — the launcher's audit trail for
+    drop/restart/shrink decisions."""
     deadline_s: float = 30.0
+    registry: Optional[Any] = None
     _last: Dict[int, float] = field(default_factory=dict)
     _step: Dict[int, int] = field(default_factory=dict)
+    _flagged: set = field(default_factory=set)
 
     def beat(self, worker: int, step: int, now: Optional[float] = None):
         self._last[worker] = time.monotonic() if now is None else now
         self._step[worker] = step
+        if worker in self._flagged:
+            self._flagged.discard(worker)
+            if self.registry is not None:
+                self.registry.emit("heartbeat_recovered", worker=worker,
+                                   step=step)
 
     def stragglers(self, now: Optional[float] = None) -> List[int]:
         now = time.monotonic() if now is None else now
-        return [w for w, t in self._last.items()
-                if now - t > self.deadline_s]
+        bad = [w for w, t in self._last.items()
+               if now - t > self.deadline_s]
+        for w in bad:
+            if w not in self._flagged:
+                self._flagged.add(w)
+                if self.registry is not None:
+                    self.registry.emit(
+                        "heartbeat_missed", worker=w,
+                        last_step=self._step.get(w, -1),
+                        overdue_s=now - self._last[w] - self.deadline_s)
+        return bad
 
     def alive_mask(self, workers: int,
                    now: Optional[float] = None) -> List[bool]:
@@ -88,20 +109,27 @@ class RestartManager:
 
     def __init__(self, ckpt_dir: str, *, save_every: int = 10,
                  keep: int = 3,
-                 inject_failure_at: Optional[int] = None):
+                 inject_failure_at: Optional[int] = None,
+                 registry: Optional[Any] = None):
         from repro.runtime import checkpoint as ckpt
         self.ckpt = ckpt
         self.dir = ckpt_dir
         self.save_every = save_every
         self.keep = keep
         self.inject_failure_at = inject_failure_at
+        self.registry = registry
         self._failed = False
+
+    def _emit(self, event: str, **fields):
+        if self.registry is not None:
+            self.registry.emit(event, **fields)
 
     def maybe_restore(self, state):
         step = self.ckpt.latest_step(self.dir)
         if step is None:
             return state, 0
         state, step = self.ckpt.restore(self.dir, state)
+        self._emit("restore", step=step)
         return state, step + 1
 
     def run(self, state, step_fn: Callable, data, start: int, steps: int):
@@ -111,11 +139,13 @@ class RestartManager:
             if (self.inject_failure_at is not None and not self._failed
                     and s == self.inject_failure_at):
                 self._failed = True
+                self._emit("failure_injected", step=s)
                 state, s = self.maybe_restore(state)
                 continue
             batch = data.batch_at(s)
             state, metrics = step_fn(state, batch)
             if (s + 1) % self.save_every == 0:
                 self.ckpt.save(self.dir, state, s, keep=self.keep)
+                self._emit("checkpoint_save", step=s)
             s += 1
         return state, s

@@ -19,5 +19,6 @@ def test_docs_links_and_snippets():
 
 
 def test_required_docs_exist():
-    for f in ("README.md", "docs/ARCHITECTURE.md", "docs/SCHEDULES.md"):
+    for f in ("README.md", "docs/ARCHITECTURE.md", "docs/SCHEDULES.md",
+              "docs/OBSERVABILITY.md"):
         assert os.path.exists(os.path.join(REPO, f)), f

@@ -57,12 +57,25 @@ class TestStraggler:
 
 class TestHeartbeat:
     def test_straggler_detection(self):
-        hb = HeartbeatMonitor(deadline_s=10.0)
+        from repro.obs import MetricsRegistry
+        reg = MetricsRegistry()
+        hb = HeartbeatMonitor(deadline_s=10.0, registry=reg)
         hb.beat(0, 5, now=100.0)
         hb.beat(1, 5, now=100.0)
         hb.beat(2, 3, now=85.0)
         assert hb.stragglers(now=100.0) == [2]
         assert hb.alive_mask(4, now=100.0) == [True, True, False, False]
+        # the miss is a structured event (once per transition, with the
+        # worker's last progress), and recovery is the paired event
+        missed = reg.find("heartbeat_missed")
+        assert [e["worker"] for e in missed] == [2]
+        assert missed[0]["last_step"] == 3
+        assert missed[0]["overdue_s"] == pytest.approx(5.0)
+        hb.stragglers(now=101.0)            # still overdue: no re-emit
+        assert len(reg.find("heartbeat_missed")) == 1
+        hb.beat(2, 4, now=101.0)
+        rec = reg.find("heartbeat_recovered")
+        assert [e["worker"] for e in rec] == [2]
 
 
 class TestElastic:
@@ -75,6 +88,7 @@ class TestElastic:
 
     def test_elastic_pipe_change_preserves_loss(self):
         """Repipeline 4 stages -> 2 stages: forward must be identical."""
+        from repro.obs import MetricsRegistry
         cfg4 = tiny_cfg("granite-8b", n_layers=4, pipe=4)
         cfg2 = tiny_cfg("granite-8b", n_layers=4, pipe=2)
         m4, m2 = Model(cfg4), Model(cfg2)
@@ -82,11 +96,16 @@ class TestElastic:
         sds = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
         state4 = pipeline_stream.init_state(m4, jax.random.PRNGKey(0), sds)
-        state2 = elastic.elastic_restate(m4, m2, state4, sds)
+        reg = MetricsRegistry()
+        state2 = elastic.elastic_restate(m4, m2, state4, sds, registry=reg)
         l4 = m4.loss(state4["params"], batch)
         l2 = m2.loss(state2["params"], batch)
         np.testing.assert_allclose(np.asarray(l4), np.asarray(l2),
                                    rtol=1e-6)
+        ev = reg.find("elastic_restate")
+        assert len(ev) == 1
+        assert ev[0]["old_pipe"] == 4 and ev[0]["new_pipe"] == 2
+        assert ev[0]["schedule"] == "stream"
 
     def test_elastic_keeps_training(self):
         cfg4 = tiny_cfg("granite-8b", n_layers=4, pipe=4)

@@ -35,6 +35,7 @@ DEFAULT_DOCS = [
     "ROADMAP.md",
     "docs/ARCHITECTURE.md",
     "docs/SCHEDULES.md",
+    "docs/OBSERVABILITY.md",
 ]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
