@@ -436,6 +436,29 @@ from repro.planner import schedule_ir as sir  # noqa: E402
 from repro.planner.schedule_ir import ROUND_SCHEDULES as IR_SCHEDULES  # noqa: E402,E501
 
 IR_BACKENDS = ("scan", "unrolled")
+EXECS = ("spmd", "mpmd")
+
+
+def _mpmd_mesh(mesh, n_devices: int):
+    """Resolve/validate the mesh the MPMD path shard_maps over: a
+    ``pipe`` axis of exactly ``n_devices`` (one pipeline stage per
+    device) and every other axis of size 1 — the path runs pure
+    pipeline parallelism; data/tensor axes belong to the SPMD path."""
+    from repro.runtime import sharding as rsh
+
+    if mesh is None:
+        mesh = rsh.mpmd_pipe_mesh(n_devices)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if sizes.get("pipe") != n_devices:
+        raise ValueError(
+            f"mpmd needs a mesh with a 'pipe' axis of size {n_devices} "
+            f"(one device per pipeline stage), got axes {sizes}")
+    extra = {k: v for k, v in sizes.items() if k != "pipe" and v != 1}
+    if extra:
+        raise ValueError(
+            f"mpmd runs pure pipeline parallelism; non-pipe mesh axes "
+            f"must have size 1, got {extra}")
+    return mesh
 
 
 def _trace_mark(tracer, dep):
@@ -505,7 +528,8 @@ def _round_program(plan):
 
 
 def make_ir_state(model, params, batch_sds, *, plan,
-                  mode: str = "spectrain") -> Dict[str, Any]:
+                  mode: str = "spectrain", exec: str = "spmd",
+                  mesh=None) -> Dict[str, Any]:
     """Train state for the IR interpreter: chunked params + momentum
     (+ the 2BW double buffer when the IR derives a stash depth of 2).
 
@@ -517,14 +541,49 @@ def make_ir_state(model, params, batch_sds, *, plan,
     Unlike the streaming runtime there are no activation rings: the
     interpreter's in-flight activations live inside one traced round,
     sized by the schedule itself (peak = ``plan.act_stash``).
+
+    ``exec="mpmd"`` builds the packed stage-local layout instead: the
+    ragged chunk trees are zero-padded and stacked into ``[v, S, Lmax,
+    ...]`` leaves (``models.model.pack_chunk_params``) and device_put
+    with ``P(None, 'pipe')`` on ``mesh`` (default: the first S local
+    devices), so chunk ``q``'s weights/momentum/stash live *only* on
+    pipe device ``q % S`` — per-device parameter memory drops to
+    ~1/S.  The state additionally carries ``chunk_sizes`` (the ragged
+    per-chunk layer counts, for unpacking/checkpoint migration).
     """
     assert mode in MODES, mode
+    if exec not in EXECS:
+        raise ValueError(f"unknown exec {exec!r}; known: {EXECS}")
     del batch_sds  # interpreter state holds no rings; shape-agnostic
     sizes = _ir_plan_check(model, plan)
     chunks = model.partition_stage_params(params["stages"], sizes,
                                           n_chunks=plan.n_chunks)
+    if exec == "mpmd":
+        from repro.models.model import pack_chunk_params
+        from repro.runtime import sharding as rsh
+
+        if model.hybrid:
+            raise NotImplementedError(
+                "mpmd: hybrid per-stage 'shared' blocks have no flat "
+                "layer order to pack; use exec='spmd'")
+        mesh = _mpmd_mesh(mesh, plan.n_devices)
+        packed, psizes = pack_chunk_params(chunks, plan.n_devices)
+        assert psizes == tuple(sizes), (psizes, sizes)
+        pparams = {"outer": params["outer"], "stages": packed}
+        state: Dict[str, Any] = {
+            "params": pparams,
+            "momentum": sgd.init(pparams).v,
+            "step": jnp.zeros((), jnp.int32),
+            "chunk_sizes": jnp.asarray(sizes, jnp.int32),
+        }
+        if max(plan.w_stash_depth) > 1:
+            state["stash"] = {
+                "params": jax.tree.map(jnp.array, pparams),
+                "momentum": jax.tree.map(jnp.array, state["momentum"]),
+            }
+        return jax.device_put(state, rsh.mpmd_state_shardings(mesh, state))
     params = {"outer": params["outer"], "stages": chunks}
-    state: Dict[str, Any] = {
+    state = {
         "params": params,
         "momentum": sgd.init(params).v,
         "step": jnp.zeros((), jnp.int32),
@@ -541,7 +600,8 @@ def make_ir_state(model, params, batch_sds, *, plan,
 
 def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
                        gamma: float = 0.9, clip: Optional[float] = None,
-                       backend: str = "scan", tracer=None) -> Callable:
+                       backend: str = "scan", tracer=None,
+                       exec: str = "spmd", mesh=None) -> Callable:
     """Schedule-driven step: one call executes one flush round (gpipe /
     1f1b / interleaved) or one 2BW accumulation group of
     ``plan.round_microbatches`` microbatches, by interpreting the IR's
@@ -581,11 +641,36 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
     callback (``_trace_mark``), which the tracer turns into per-(device,
     event) spans.  ``tracer=None`` (the default) adds nothing to the
     trace — the step stays byte-identical to the untraced interpreter.
+
+    ``exec`` selects the execution model: ``"spmd"`` (default) runs the
+    round as one replicated program (stage weights visible everywhere,
+    GSPMD free to shard); ``"mpmd"`` runs each device's tick stream
+    inside a ``shard_map`` over ``mesh``'s ``pipe`` axis against
+    stage-*local* packed weights, moving activations/cotangents across
+    the stage cuts via ``ppermute`` (see :func:`_make_mpmd_step`) —
+    bitwise-identical losses and state leaves, ~1/S per-device weight
+    memory.  ``backend`` applies to the SPMD path only; mpmd requires
+    the matching ``make_ir_state(..., exec="mpmd")`` packed state and
+    refuses ``clip`` and hybrid models.
     """
     assert mode in MODES, mode
     if backend not in IR_BACKENDS:
         raise ValueError(
             f"unknown IR backend {backend!r}; known: {IR_BACKENDS}")
+    if exec not in EXECS:
+        raise ValueError(f"unknown exec {exec!r}; known: {EXECS}")
+    if exec == "mpmd":
+        if clip:
+            raise NotImplementedError(
+                "mpmd + clip_by_global_norm: the global norm's "
+                "canonical-order reduction is not bit-reproducible on "
+                "the packed stage layout; use exec='spmd'")
+        if model.hybrid:
+            raise NotImplementedError(
+                "mpmd: hybrid per-stage 'shared' blocks have no flat "
+                "layer order to pack; use exec='spmd'")
+        return _make_mpmd_step(model, plan=plan, mode=mode, lr=lr,
+                               gamma=gamma, tracer=tracer, mesh=mesh)
     sizes = _ir_plan_check(model, plan)
     del sizes
     prog = _round_program(plan)
@@ -647,7 +732,12 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
             outs: Dict[Tuple[int, int], Any] = {}  # (m, q) -> chunk output
             cots: Dict[Tuple[int, int], Any] = {}  # (m, q) -> out cotangent
             g_chunks = [None] * C
-            g_outer = None
+            # the outer grad runs as two independent accumulators (head
+            # contributions at chunk C-1, embed contributions at chunk
+            # 0) combined once after the round — the association the
+            # MPMD backend reproduces without per-event cross-device
+            # traffic (head and embed live on different devices)
+            g_out_h = g_out_e = None
             losses = []
 
             def acc(a, g):
@@ -672,7 +762,7 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
                                 outer_w(s), outs.pop((m, q)))
                             go_head, cot = head_vjp(
                                 jnp.ones((), loss_m.dtype))
-                            g_outer = acc(g_outer, go_head)
+                            g_out_h = acc(g_out_h, go_head)
                             losses.append(loss_m)
                         else:
                             cot = cots.pop((m, q + 1))
@@ -685,7 +775,7 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
                                 lambda o: model.embed(o, mb(m)),
                                 outer_w(s))
                             (go_embed,) = evjp(gx)
-                            g_outer = acc(g_outer, go_embed)
+                            g_out_e = acc(g_out_e, go_embed)
                         else:
                             cots[(m, q)] = gx
                         dep = gx
@@ -696,6 +786,7 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
                     f"{plan.schedule!r} round program (round size {M}) "
                     f"left in-flight tensors: "
                     f"{sorted(acts) + sorted(outs) + sorted(cots)}")
+            g_outer = jax.tree.map(jnp.add, g_out_h, g_out_e)
             return g_outer, tuple(g_chunks), sum(losses) / len(losses)
 
         # ---------------------------------------------------- scan body
@@ -732,7 +823,7 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
                 W, Wo = chunk_w(q, s), outer_w(s)
 
                 def br(carry, row):
-                    P, Q, gs, go, ls = carry
+                    P, Q, gs, goh, goe, ls = carry
                     m = row[sir.COL_MB]
                     if q == 0:
                         x = model.embed(Wo, mb(m))
@@ -744,16 +835,15 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
                     out, _aux = stage_fn(W, x)
                     P = jax.lax.dynamic_update_index_in_dim(
                         P, out, row[sir.COL_B], 0)
-                    return (P, Q, gs, go, ls)
+                    return (P, Q, gs, goh, goe, ls)
                 return br
 
             def bwd_branch(q, s):
                 W, Wo = chunk_w(q, s), outer_w(s)
 
                 def br(carry, row):
-                    P, Q, gs, go, ls = carry
+                    P, Q, gs, goh, goe, ls = carry
                     first_g = row[sir.COL_FIRST_G] > 0
-                    first_o = row[sir.COL_FIRST_O] > 0
                     m = row[sir.COL_MB]
                     x = jax.lax.dynamic_index_in_dim(
                         P, row[sir.COL_A], 0, keepdims=False)
@@ -765,7 +855,8 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
                             lambda o, xl: model.head_loss(o, xl, tgt),
                             Wo, out)
                         go_head, cot = head_vjp(jnp.ones((), loss_m.dtype))
-                        go = first_or_add(go, go_head, first_o)
+                        goh = first_or_add(goh, go_head,
+                                           row[sir.COL_FIRST_O] > 0)
                         ls = ls + loss_m
                     else:
                         cot = jax.lax.dynamic_index_in_dim(
@@ -779,15 +870,12 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
                         _, evjp = jax.vjp(lambda o: model.embed(o, mb(m)),
                                           Wo)
                         (go_embed,) = evjp(gx)
-                        # with C == 1 the head already contributed in
-                        # this same event, so the embed grad always adds
-                        fo = first_o if C > 1 else \
-                            jnp.zeros((), jnp.bool_)
-                        go = first_or_add(go, go_embed, fo)
+                        goe = first_or_add(goe, go_embed,
+                                           row[sir.COL_FIRST_E] > 0)
                     else:
                         Q = jax.lax.dynamic_update_index_in_dim(
                             Q, gx, row[sir.COL_C], 0)
-                    return (P, Q, gs, go, ls)
+                    return (P, Q, gs, goh, goe, ls)
                 return br
 
             branches = [fwd_branch(q, s) if kind == "fwd"
@@ -800,7 +888,7 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
                 if tracer is not None:
                     # token touches both pools and the loss accumulator
                     # so the mark trails this row's writes
-                    P, Q, _gs, _go, ls = carry
+                    P, Q, _gs, _goh, _goe, ls = carry
                     _trace_mark(
                         tracer,
                         ls + (P.ravel()[0] + Q.ravel()[0]).astype(ls.dtype)
@@ -813,10 +901,12 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
                           x_sd.dtype),
                 jax.tree.map(jnp.zeros_like, params["stages"]),
                 jax.tree.map(jnp.zeros_like, params["outer"]),
+                jax.tree.map(jnp.zeros_like, params["outer"]),
                 jnp.zeros((), loss_sd.dtype),
             )
-            (_, _, g_chunks, g_outer, loss_sum), _ = jax.lax.scan(
+            (_, _, g_chunks, go_h, go_e, loss_sum), _ = jax.lax.scan(
                 body, carry0, jnp.asarray(table.rows))
+            g_outer = jax.tree.map(jnp.add, go_h, go_e)
             return g_outer, g_chunks, loss_sum / M
 
         g_outer, g_chunks, loss = (scan_round if backend == "scan"
@@ -836,5 +926,351 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
             new_state["stash"] = {"params": params, "momentum": mom}
         return new_state, {"loss": loss,
                            "loss_valid": jnp.ones((), jnp.float32)}
+
+    return step
+
+
+# ===========================================================================
+# MPMD execution path: stage-local weights via shard_map, activations
+# and cotangents crossing the stage cuts via ppermute ring transfers
+# ===========================================================================
+
+def _make_mpmd_step(model, *, plan, mode, lr, gamma, tracer, mesh):
+    """True MPMD round body: one ``shard_map`` over the ``pipe`` axis
+    runs each device's tick stream (:meth:`PipelinePlan.device_streams`)
+    against its *local* packed weight shard.
+
+    Per tick every device (1) ``lax.switch``-dispatches its row's branch
+    — a (kind, chunk, lag) compute event or the NOP — reading/writing
+    its private activation/cotangent slot pools and statically slicing
+    its own chunks out of the packed ``[v, 1, Lmax, ...]`` shard, then
+    (2) the whole mesh runs two ``ppermute`` rings (forward ring
+    ``d -> d+1`` carries the tick's stage outputs, backward ring
+    ``d -> d-1`` the cotangents) and (3) parks the received payload in
+    the slot its row names (or a trash slot on idle ticks, so the
+    program stays SPMD-uniform while the *execution* is MPMD: different
+    devices run different branches each tick).
+
+    Bitwise parity with the SPMD interpreters is by construction, not
+    tolerance: a device's stream preserves the global timeline order of
+    its own chunks' events, so every per-chunk gradient accumulates in
+    scan order; the outer gradient runs as the same two head/embed
+    accumulators the SPMD bodies use (head contributions live on device
+    ``(C-1) % S``, embed on device 0) combined once outside the
+    shard_map by *static indexing* of the per-device partials — no
+    psum, whose identity-element adds would flip -0.0 bits.  The update
+    itself is elementwise on the packed layout (padding rows stay
+    exactly zero), so unpacking the new state reproduces the SPMD state
+    leaves byte-for-byte.
+
+    With a ``tracer`` the tick loop is unrolled into one *individually
+    jitted* shard_map call per tick, executed eagerly with a blocking
+    host mark between calls (``io_callback`` is not safe inside
+    shard_map, and an ordered callback's token breaks XLA sharding
+    propagation for explicitly-sharded entry parameters) — so the
+    traced step must NOT be wrapped in an outer ``jax.jit``, and
+    attribution is tick-granular: install the groups from
+    ``obs.trace.device_stream_tick_groups`` on the tracer.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    sizes = _ir_plan_check(model, plan)
+    streams = plan.device_streams()
+    C, M, S = plan.n_chunks, plan.round_microbatches, plan.n_devices
+    T = streams.rows.shape[0]
+    two_buf = max(plan.w_stash_depth) > 1
+    mesh = _mpmd_mesh(mesh, S)
+    d_head = (C - 1) % S
+    nv, nc = streams.n_val_slots, streams.n_cot_slots
+    lags = sorted({s for _k, _q, s in streams.branches})
+    rows = jnp.asarray(streams.rows)          # [T, S, DN_COLS]
+    fwd_perm = [(i, (i + 1) % S) for i in range(S)]
+    bwd_perm = [(i, (i - 1) % S) for i in range(S)]
+
+    def stage_fn(sp, xk):
+        xk, aux = model.stage_apply(sp, (xk, jnp.zeros((), jnp.float32)))
+        return xk, aux
+
+    def _pre(state, batch):
+        """Round prologue: microbatch split + per-lag weight reads.
+
+        Prediction (Eq. 4) is elementwise, so predicting the whole
+        packed tree equals the SPMD per-chunk prediction bit-for-bit
+        (padding stays zero).  One read per distinct lag, *outside*
+        the shard_map."""
+        mbs = jax.tree.map(
+            lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]), batch)
+        if two_buf:
+            base_p, base_m = state["stash"]["params"], \
+                state["stash"]["momentum"]
+        else:
+            base_p, base_m = state["params"], state["momentum"]
+        stage_rd = {}
+        outer_rd = {}
+        for s in lags:
+            if mode == "spectrain" and s > 0:
+                stage_rd[s] = st.predict_weights(
+                    base_p["stages"], base_m["stages"], lr, float(s))
+                outer_rd[s] = st.predict_weights(
+                    base_p["outer"], base_m["outer"], lr, float(s))
+            else:
+                stage_rd[s] = base_p["stages"]
+                outer_rd[s] = base_p["outer"]
+        return mbs, stage_rd, outer_rd
+
+    def _post(state, gs_g, goh_g, goe_g, ls_g):
+        """Round epilogue: combine the per-device outer partials by
+        *static indexing* (head lives on device (C-1)%S, embed on
+        device 0) — the one cross-device add of the round, in the same
+        head+embed order as the SPMD bodies (a psum would add identity
+        elements and flip -0.0 bits) — then apply the SGD update."""
+        params, mom = state["params"], state["momentum"]
+        go = jax.tree.map(lambda h, e: h[d_head] + e[0], goh_g, goe_g)
+        loss = ls_g[d_head] / M
+        grads = {"outer": go, "stages": gs_g}
+        grads = jax.tree.map(lambda g: g / M, grads)
+        new_params, new_mom = sgd.update(
+            params, sgd.MomentumState(mom), grads, lr=lr, gamma=gamma)
+        new_state = {
+            **state,
+            "params": new_params, "momentum": new_mom.v,
+            "step": state["step"] + 1,
+        }
+        if two_buf:
+            new_state["stash"] = {"params": params, "momentum": mom}
+        return new_state, {"loss": loss,
+                           "loss_valid": jnp.ones((), jnp.float32)}
+
+    _jits: dict = {}   # traced path: cached pre / per-tick / post jits
+
+    def step(state: Dict[str, Any], batch):
+        B = jax.tree.leaves(batch)[0].shape[0]
+        if B % M:
+            raise ValueError(
+                f"batch {B} not divisible by the {plan.schedule!r} plan's "
+                f"round size (round_microbatches={M})")
+        base_p = state["stash"]["params"] if two_buf \
+            else state["params"]
+
+        as_sds = lambda t: jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+        mb_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                (x.shape[0] // M,) + x.shape[1:], x.dtype), batch)
+        x_sd = jax.eval_shape(model.embed, as_sds(base_p["outer"]), mb_sds)
+        chunk0_sds = {"layers": jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct((sizes[0],) + a.shape[3:],
+                                           a.dtype),
+            base_p["stages"]["layers"])}
+        out_sd, _ = jax.eval_shape(stage_fn, chunk0_sds, x_sd)
+        if (out_sd.shape, out_sd.dtype) != (x_sd.shape, x_sd.dtype):
+            raise ValueError(
+                f"mpmd needs one uniform activation/transfer shape, got "
+                f"embed {x_sd.shape}/{x_sd.dtype} vs stage "
+                f"{out_sd.shape}/{out_sd.dtype}")
+        loss_sd = jax.eval_shape(model.head_loss, as_sds(base_p["outer"]),
+                                 out_sd, mb_sds["targets"])
+        zeros_x = lambda: jnp.zeros(x_sd.shape, x_sd.dtype)
+
+        def make_tick(mbs_l, srd_l, ord_l):
+            """The shared per-tick body, closed over a device's *local*
+            views: replicated microbatches, the packed weight shard
+            ``[v, 1, Lmax, ...]`` per lag, the replicated outer reads."""
+            mb = lambda m: jax.tree.map(lambda x: x[m], mbs_l)
+
+            def chunk_of(s, q):
+                j, Lq = q // S, sizes[q]
+                return {"layers": jax.tree.map(
+                    lambda a: a[j, 0, :Lq], srd_l[s]["layers"])}
+
+            def first_or_add(acc, g, first):
+                return jax.tree.map(
+                    lambda a, gg: jnp.where(first, gg, a + gg), acc, g)
+
+            def gs_acc(gs, gw, q, first):
+                # static in-place accumulate of chunk q's ragged grad
+                # into the packed local shard (padding rows untouched)
+                j, Lq = q // S, sizes[q]
+
+                def leaf(a, g):
+                    cur = a[j, 0, :Lq]
+                    return a.at[j, 0, :Lq].set(jnp.where(first, g, cur + g))
+
+                return {"layers": jax.tree.map(leaf, gs["layers"],
+                                               gw["layers"])}
+
+            def mk_fwd(q, s):
+                def br(carry, row):
+                    V, Ct, gs, goh, goe, ls = carry
+                    m = row[sir.DCOL_MB]
+                    if q == 0:
+                        x = model.embed(ord_l[s], mb(m))
+                        V = jax.lax.dynamic_update_index_in_dim(
+                            V, x, row[sir.DCOL_A], 0)
+                    else:
+                        x = jax.lax.dynamic_index_in_dim(
+                            V, row[sir.DCOL_A], 0, keepdims=False)
+                    out, _aux = stage_fn(chunk_of(s, q), x)
+                    if q == C - 1:
+                        V = jax.lax.dynamic_update_index_in_dim(
+                            V, out, row[sir.DCOL_B], 0)
+                        sf = zeros_x()
+                    else:
+                        sf = out
+                    return (V, Ct, gs, goh, goe, ls), sf, zeros_x()
+                return br
+
+            def mk_bwd(q, s):
+                def br(carry, row):
+                    V, Ct, gs, goh, goe, ls = carry
+                    m = row[sir.DCOL_MB]
+                    x = jax.lax.dynamic_index_in_dim(
+                        V, row[sir.DCOL_A], 0, keepdims=False)
+                    if q == C - 1:
+                        out = jax.lax.dynamic_index_in_dim(
+                            V, row[sir.DCOL_B], 0, keepdims=False)
+                        tgt = mb(m)["targets"]
+                        loss_m, head_vjp = jax.vjp(
+                            lambda o, xl: model.head_loss(o, xl, tgt),
+                            ord_l[s], out)
+                        go_head, cot = head_vjp(jnp.ones((), loss_m.dtype))
+                        goh = first_or_add(goh, go_head,
+                                           row[sir.DCOL_FIRST_O] > 0)
+                        ls = ls + loss_m
+                    else:
+                        cot = jax.lax.dynamic_index_in_dim(
+                            Ct, row[sir.DCOL_C], 0, keepdims=False)
+                    _, vjp_q = jax.vjp(stage_fn, chunk_of(s, q), x)
+                    gw, gx = vjp_q((cot, jnp.ones((), jnp.float32)))
+                    gs = gs_acc(gs, gw, q, row[sir.DCOL_FIRST_G] > 0)
+                    if q == 0:
+                        _, evjp = jax.vjp(lambda o: model.embed(o, mb(m)),
+                                          ord_l[s])
+                        (go_embed,) = evjp(gx)
+                        goe = first_or_add(goe, go_embed,
+                                           row[sir.DCOL_FIRST_E] > 0)
+                        sb = zeros_x()
+                    else:
+                        sb = gx
+                    return (V, Ct, gs, goh, goe, ls), zeros_x(), sb
+                return br
+
+            branches = [mk_fwd(q, s) if kind == "fwd" else mk_bwd(q, s)
+                        for kind, q, s in streams.branches]
+            branches.append(
+                lambda carry, row: (carry, zeros_x(), zeros_x()))
+
+            def tick(carry, row):
+                carry, sf, sb = jax.lax.switch(
+                    row[sir.DCOL_BRANCH], branches, carry, row)
+                # both rings run every tick (idle devices carry the
+                # NOP's garbage payload into a trash slot) so the
+                # program stays SPMD while the execution is MPMD
+                rf = jax.lax.ppermute(sf, "pipe", fwd_perm) if S > 1 \
+                    else sf
+                rb = jax.lax.ppermute(sb, "pipe", bwd_perm) if S > 1 \
+                    else sb
+                V, Ct, gs, goh, goe, ls = carry
+                V = jax.lax.dynamic_update_index_in_dim(
+                    V, rf, jnp.where(row[sir.DCOL_RECV_F] >= 0,
+                                     row[sir.DCOL_RECV_F], nv), 0)
+                Ct = jax.lax.dynamic_update_index_in_dim(
+                    Ct, rb, jnp.where(row[sir.DCOL_RECV_B] >= 0,
+                                      row[sir.DCOL_RECV_B], nc), 0)
+                return (V, Ct, gs, goh, goe, ls)
+            return tick
+
+        def local_carry0(srd_l, ord_l):
+            return (
+                jnp.zeros((nv + 1,) + x_sd.shape, x_sd.dtype),
+                jnp.zeros((nc + 1,) + x_sd.shape, x_sd.dtype),
+                jax.tree.map(jnp.zeros_like, srd_l[lags[0]]),
+                jax.tree.map(jnp.zeros_like, ord_l[lags[0]]),
+                jax.tree.map(jnp.zeros_like, ord_l[lags[0]]),
+                jnp.zeros((), loss_sd.dtype),
+            )
+
+        expand = lambda t: jax.tree.map(lambda x: x[None], t)
+
+        if tracer is None:
+            mbs, stage_rd, outer_rd = _pre(state, batch)
+
+            def round_body(rows_l, mbs_l, srd_l, ord_l):
+                tick = make_tick(mbs_l, srd_l, ord_l)
+
+                def body(carry, row):
+                    return tick(carry, row[0]), None
+
+                (_V, _Ct, gs, goh, goe, ls), _ = jax.lax.scan(
+                    body, local_carry0(srd_l, ord_l), rows_l)
+                return gs, expand(goh), expand(goe), ls[None]
+
+            run = shard_map(
+                round_body, mesh=mesh,
+                in_specs=(P(None, "pipe", None), P(), P(None, "pipe"),
+                          P()),
+                out_specs=(P(None, "pipe"), P("pipe"), P("pipe"),
+                           P("pipe")),
+                check_rep=False)
+            gs_g, goh_g, goe_g, ls_g = run(rows, mbs, stage_rd, outer_rd)
+            return _post(state, gs_g, goh_g, goe_g, ls_g)
+        else:
+            # tick-unrolled: one jitted shard_map per tick, a blocking
+            # host mark between calls — io_callback is not safe inside
+            # shard_map, and an ordered callback's token breaks XLA
+            # sharding propagation with explicitly-sharded parameters,
+            # so the traced round runs *eagerly* (per-tick jit, cached
+            # after the first call).  Device-local carries cross the
+            # calls as pipe-sharded globals (pools/outer partials gain
+            # a leading [S] axis).
+            if isinstance(jax.tree.leaves(state)[0], jax.core.Tracer):
+                raise ValueError(
+                    "the traced mpmd step measures real per-tick wall "
+                    "time and must not be wrapped in an outer jax.jit "
+                    "— call it eagerly (it jits each tick internally)")
+            if not _jits:
+                def tick_body(row_l, mbs_l, srd_l, ord_l,
+                              V_l, Ct_l, gs, goh_l, goe_l, ls_l):
+                    tick = make_tick(mbs_l, srd_l, ord_l)
+                    carry = (V_l[0], Ct_l[0], gs,
+                             jax.tree.map(lambda x: x[0], goh_l),
+                             jax.tree.map(lambda x: x[0], goe_l),
+                             ls_l[0])
+                    V, Ct, gs, goh, goe, ls = tick(carry, row_l[0])
+                    return (V[None], Ct[None], gs, expand(goh),
+                            expand(goe), ls[None])
+
+                _jits["tick"] = jax.jit(shard_map(
+                    tick_body, mesh=mesh,
+                    in_specs=(P("pipe", None), P(), P(None, "pipe"),
+                              P(), P("pipe"), P("pipe"),
+                              P(None, "pipe"), P("pipe"), P("pipe"),
+                              P("pipe")),
+                    out_specs=(P("pipe"), P("pipe"), P(None, "pipe"),
+                               P("pipe"), P("pipe"), P("pipe")),
+                    check_rep=False), donate_argnums=(4, 5, 6, 7, 8, 9))
+                # the prologue and epilogue run under their own jits:
+                # eager op-by-op execution would skip the FMA fusion
+                # XLA applies inside the untraced step's single jit and
+                # break bitwise parity with it
+                _jits["pre"] = jax.jit(_pre)
+                _jits["post"] = jax.jit(_post)
+            mbs, stage_rd, outer_rd = _jits["pre"](state, batch)
+            run = _jits["tick"]
+            Vg = jnp.zeros((S, nv + 1) + x_sd.shape, x_sd.dtype)
+            Cg = jnp.zeros((S, nc + 1) + x_sd.shape, x_sd.dtype)
+            gs_g = jax.tree.map(jnp.zeros_like, stage_rd[lags[0]])
+            big = lambda t: jax.tree.map(
+                lambda x: jnp.zeros((S,) + x.shape, x.dtype), t)
+            goh_g, goe_g = big(outer_rd[lags[0]]), big(outer_rd[lags[0]])
+            ls_g = jnp.zeros((S,), loss_sd.dtype)
+            for t in range(T):
+                Vg, Cg, gs_g, goh_g, goe_g, ls_g = run(
+                    rows[t], mbs, stage_rd, outer_rd,
+                    Vg, Cg, gs_g, goh_g, goe_g, ls_g)
+                jax.block_until_ready(ls_g)
+                tracer._mark()
+            return _jits["post"](state, gs_g, goh_g, goe_g, ls_g)
 
     return step

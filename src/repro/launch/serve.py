@@ -31,61 +31,77 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     registry = MetricsRegistry(jsonl_path=args.metrics_out or None)
-    if args.metrics_out:
-        from repro.kernels import ops as kernel_ops
-        kernel_ops.set_timing_hook(registry.kernel_hook())
-    cfg = smoke_config(get_config(args.arch))
-    model = Model(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = model.init(key)
-    B = args.batch
-    max_seq = args.prompt_len + args.gen
+    try:
+        if args.metrics_out:
+            from repro.kernels import ops as kernel_ops
+            kernel_ops.set_timing_hook(registry.kernel_hook())
+        cfg = smoke_config(get_config(args.arch))
+        model = Model(cfg)
+        key = jax.random.PRNGKey(args.seed)
+        params = model.init(key)
+        B = args.batch
+        max_seq = args.prompt_len + args.gen
 
-    prompt = jax.random.randint(key, (B, args.prompt_len), 0,
-                                cfg.vocab_size)
-    cache = model.init_cache(B, max_seq)
-    decode = jax.jit(model.decode_step, donate_argnums=1)
+        prompt = jax.random.randint(key, (B, args.prompt_len), 0,
+                                    cfg.vocab_size)
+        decode = jax.jit(model.decode_step, donate_argnums=1)
 
-    # prefill by stepping the decoder over the prompt (works uniformly for
-    # attention, SSM and hybrid caches)
-    t0 = time.time()
-    tok = prompt[:, :1]
-    for p in range(args.prompt_len):
-        tok = prompt[:, p:p + 1]
-        logits, cache = decode(params, cache, tok,
-                               jnp.asarray(p, jnp.int32))
-    prefill_s = time.time() - t0
+        # warm up on a throwaway cache (decode donates its cache
+        # argument) so the reported prefill/decode rates measure
+        # steady-state steps, not XLA compilation
+        t0 = time.time()
+        warm = model.init_cache(B, max_seq)
+        logits, warm = decode(params, warm, prompt[:, :1],
+                              jnp.asarray(0, jnp.int32))
+        jax.block_until_ready(logits)
+        del warm
+        compile_s = time.time() - t0
 
-    tok_hist = registry.histogram("serve/decode_token_ms")
-    out = []
-    t0 = time.time()
-    last = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None]
-    for g in range(args.gen):
-        out.append(np.asarray(last))
-        tt = time.time()
-        logits, cache = decode(params, cache, last.astype(jnp.int32),
-                               jnp.asarray(args.prompt_len + g, jnp.int32))
+        # prefill by stepping the decoder over the prompt (works
+        # uniformly for attention, SSM and hybrid caches)
+        cache = model.init_cache(B, max_seq)
+        t0 = time.time()
+        for p in range(args.prompt_len):
+            logits, cache = decode(params, cache, prompt[:, p:p + 1],
+                                   jnp.asarray(p, jnp.int32))
+        jax.block_until_ready(logits)
+        prefill_s = time.time() - t0
+
+        tok_hist = registry.histogram("serve/decode_token_ms")
+        out = []
+        t0 = time.time()
         last = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None]
-        jax.block_until_ready(last)
-        tok_hist.observe((time.time() - tt) * 1e3)
-    decode_s = time.time() - t0
+        for g in range(args.gen):
+            out.append(np.asarray(last))
+            tt = time.time()
+            logits, cache = decode(
+                params, cache, last.astype(jnp.int32),
+                jnp.asarray(args.prompt_len + g, jnp.int32))
+            last = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None]
+            jax.block_until_ready(last)
+            tok_hist.observe((time.time() - tt) * 1e3)
+        decode_s = time.time() - t0
 
-    toks = np.concatenate(out, axis=1)
-    registry.gauge("serve/prefill_tok_per_s").set(
-        args.prompt_len * B / prefill_s)
-    registry.gauge("serve/decode_tok_per_s").set(args.gen * B / decode_s)
-    registry.emit("serve_request", arch=cfg.name, batch=B,
-                  prompt_len=args.prompt_len, gen=args.gen,
-                  prefill_s=prefill_s, decode_s=decode_s,
-                  decode_token_ms=tok_hist.snapshot())
-    registry.close()
-    print(f"arch={cfg.name} batch={B} prompt={args.prompt_len} "
-          f"gen={args.gen}")
-    print(f"prefill: {args.prompt_len * B / prefill_s:.1f} tok/s   "
-          f"decode: {args.gen * B / decode_s:.1f} tok/s")
-    print("sample:", toks[0, :16].tolist())
-    assert np.isfinite(np.asarray(logits, np.float32)).all()
-    return 0
+        toks = np.concatenate(out, axis=1)
+        registry.gauge("serve/compile_s").set(compile_s)
+        registry.gauge("serve/prefill_tok_per_s").set(
+            args.prompt_len * B / prefill_s)
+        registry.gauge("serve/decode_tok_per_s").set(args.gen * B / decode_s)
+        registry.emit("serve_request", arch=cfg.name, batch=B,
+                      prompt_len=args.prompt_len, gen=args.gen,
+                      compile_s=compile_s, prefill_s=prefill_s,
+                      decode_s=decode_s,
+                      decode_token_ms=tok_hist.snapshot())
+        print(f"arch={cfg.name} batch={B} prompt={args.prompt_len} "
+              f"gen={args.gen}")
+        print(f"compile: {compile_s:.2f}s   "
+              f"prefill: {args.prompt_len * B / prefill_s:.1f} tok/s   "
+              f"decode: {args.gen * B / decode_s:.1f} tok/s")
+        print("sample:", toks[0, :16].tolist())
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        return 0
+    finally:
+        registry.close()
 
 
 if __name__ == "__main__":

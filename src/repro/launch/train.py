@@ -15,7 +15,10 @@ schedule (round schedules run through the IR interpreter, one flush
 round / 2BW group per step); ``--virtual-stages v`` gives each device v
 chunk-stages under ``--schedule interleaved``; ``--ir-backend
 {scan,unrolled}`` picks the interpreter's round body (the default scan
-backend keeps trace size O(1) in the round's microbatch count).  See
+backend keeps trace size O(1) in the round's microbatch count);
+``--exec {spmd,mpmd}`` picks the execution backend (``mpmd`` keeps
+each stage's weights resident only on its pipe device — bitwise the
+same training, 1/S the per-device weight memory).  See
 docs/SCHEDULES.md.
 
 ``--layers`` need not divide ``--pipe``: stage params are ragged
@@ -41,7 +44,8 @@ from repro.configs.base import MeshPlan
 from repro.core import pipeline_stream, pipeline_sync
 from repro.data import DataConfig, SyntheticLM
 from repro.models import Model
-from repro.obs import (MetricsRegistry, PipelineTracer, drift_report,
+from repro.obs import (MetricsRegistry, PipelineTracer,
+                       device_stream_tick_groups, drift_report,
                        format_drift, format_step, probe_stage_costs,
                        write_trace)
 from repro.optim import compression, sgd
@@ -104,6 +108,15 @@ def main(argv=None) -> int:
                          "event table (O(1) trace size in the round's "
                          "microbatch count), 'unrolled' inlines every "
                          "event (the reference oracle)")
+    ap.add_argument("--exec", default="spmd", dest="exec",
+                    choices=pipeline_stream.EXECS,
+                    help="execution backend for IR schedules: 'spmd' "
+                         "replicates every stage's weights on every "
+                         "device, 'mpmd' keeps stage weights device-"
+                         "local (shard_map over the pipe axis, "
+                         "activations cross stage cuts via ppermute); "
+                         "bitwise-identical results, 1/S the per-device "
+                         "weight memory (needs >= --pipe devices)")
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
@@ -156,6 +169,18 @@ def main(argv=None) -> int:
         raise SystemExit(
             f"--virtual-stages {args.virtual_stages} requires "
             f"--schedule interleaved, got --schedule {args.schedule}")
+    if args.exec == "mpmd":
+        if args.mode == "sync" or \
+                args.schedule not in pipeline_stream.IR_SCHEDULES:
+            raise SystemExit(
+                f"--exec mpmd runs IR round schedules "
+                f"({'/'.join(pipeline_stream.IR_SCHEDULES)}); got "
+                f"--schedule {args.schedule} --mode {args.mode}")
+        if args.clip:
+            raise SystemExit(
+                "--exec mpmd does not support --clip: the global "
+                "norm's canonical-order reduction is not "
+                "bit-reproducible on the packed stage layout")
     schedule = "gpipe" if args.mode == "sync" else args.schedule
     plan_kw = {}
     if schedule in pipeline_stream.IR_SCHEDULES and args.mode != "sync":
@@ -219,11 +244,17 @@ def main(argv=None) -> int:
             clip=args.clip or None)
     elif schedule in pipeline_stream.IR_SCHEDULES:
         state = pipeline_stream.make_ir_state(
-            model, model.init(key), batch_sds, plan=pplan, mode=args.mode)
+            model, model.init(key), batch_sds, plan=pplan,
+            mode=args.mode, exec=args.exec)
         step_fn = pipeline_stream.make_ir_train_step(
             model, plan=pplan, mode=args.mode, lr=args.lr,
             gamma=args.gamma, clip=args.clip or None,
-            backend=args.ir_backend, tracer=tracer)
+            backend=args.ir_backend, exec=args.exec, tracer=tracer)
+        if tracer is not None and args.exec == "mpmd":
+            # the mpmd round runs T device-stream ticks, not one host
+            # mark per compute event — map tick marks back onto the
+            # per-event timeline
+            tracer.set_tick_groups(device_stream_tick_groups(pplan))
     else:
         state = pipeline_stream.init_state(
             model, key, batch_sds, mode=args.mode,
@@ -231,7 +262,10 @@ def main(argv=None) -> int:
         step_fn = pipeline_stream.make_train_step(
             model, mode=args.mode, lr=args.lr, gamma=args.gamma,
             clip=args.clip or None, ticks_per_step=args.ticks, plan=pplan)
-    step_fn = jax.jit(step_fn, donate_argnums=0)
+    # the traced mpmd step measures real per-tick wall time and jits
+    # each tick internally; an outer jit would swallow the host marks
+    if not (args.exec == "mpmd" and tracer is not None):
+        step_fn = jax.jit(step_fn, donate_argnums=0)
     if tracer is not None:
         if schedule == "stream":
             # the fused tick step is not separable per stage -- probe

@@ -73,6 +73,62 @@ def split_flat_stages(flat_stages, sizes) -> Tuple[Any, ...]:
     return tuple(out)
 
 
+def pack_chunk_params(chunks, n_devices: int):
+    """Ragged chunk trees -> the dense MPMD layout: every ``layers``
+    leaf becomes ``[v, S, Lmax, ...]`` with chunk ``q`` at index
+    ``[q // S, q % S]`` zero-padded to ``Lmax = max(sizes)`` rows.
+
+    Sharding dim 1 with ``PartitionSpec(None, 'pipe')`` therefore pins
+    chunk ``q`` wholly to pipe device ``q % S`` (Megatron round-robin
+    folding) — the layout that lets one jitted program hold
+    differently-sized stage trees stage-locally.  Reshaping dims 0–1 to
+    ``[C, Lmax, ...]`` row-major recovers chunk order, which is flat
+    layer order.  Returns ``(packed_tree, sizes)``; hybrid per-stage
+    ``shared`` blocks have no layer stack to pad and are refused.
+    """
+    C = len(chunks)
+    S = int(n_devices)
+    if S < 1 or C % S:
+        raise ValueError(f"{C} chunk trees do not fold onto {S} devices")
+    if any("shared" in t for t in chunks):
+        raise ValueError(
+            "hybrid stage trees carry per-stage 'shared' blocks with no "
+            "flat layer order; the packed MPMD layout does not cover them")
+    sizes = tuple(int(jax.tree.leaves(t["layers"])[0].shape[0])
+                  for t in chunks)
+    Lmax = max(sizes)
+    v = C // S
+
+    def leaf(*xs):
+        padded = [
+            jnp.concatenate(
+                [x, jnp.zeros((Lmax - x.shape[0],) + x.shape[1:], x.dtype)],
+                0) if x.shape[0] < Lmax else x
+            for x in xs]
+        return jnp.stack(padded, 0).reshape((v, S, Lmax) + xs[0].shape[1:])
+
+    packed = {"layers": jax.tree.map(leaf, *[t["layers"] for t in chunks])}
+    return packed, sizes
+
+
+def unpack_chunk_params(packed, sizes) -> Tuple[Any, ...]:
+    """Inverse of :func:`pack_chunk_params`: dense ``[v, S, Lmax, ...]``
+    leaves back to the ragged chunk trees (padding rows dropped)."""
+    sizes = tuple(int(n) for n in sizes)
+    C = len(sizes)
+
+    def flat(a):
+        if a.shape[0] * a.shape[1] != C:
+            raise ValueError(
+                f"packed leaf folds {a.shape[0] * a.shape[1]} chunks, "
+                f"sizes cover {C}")
+        return a.reshape((C,) + a.shape[2:])
+
+    rows = jax.tree.map(flat, packed["layers"])
+    return tuple({"layers": jax.tree.map(lambda a: a[q, :sizes[q]], rows)}
+                 for q in range(C))
+
+
 class Model:
     """Functional model wrapper for one ArchConfig.
 

@@ -23,4 +23,5 @@ from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
 from repro.obs.perfetto import (trace_events, validate_trace,  # noqa: F401
                                 write_trace)
 from repro.obs.trace import (PipelineTracer, Span,  # noqa: F401
+                             device_stream_tick_groups,
                              probe_stage_costs, round_event_metas)

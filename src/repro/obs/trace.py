@@ -80,6 +80,24 @@ def round_event_metas(plan) -> List[Dict[str, Any]]:
         for (kind, m, q, s), t in zip(prog, ticks)]
 
 
+def device_stream_tick_groups(plan) -> List[List[int]]:
+    """Event-index groups per schedule tick, in tick order — the mark
+    granularity of the MPMD execution path.
+
+    The MPMD round marks once per *tick* (one shard_map call per tick
+    when traced; events inside a tick run concurrently on different
+    devices, so per-event marks would race), while
+    :func:`round_event_metas` is per *event*.  Group ``t`` lists the
+    meta indices of every event in the round's ``t``-th distinct tick —
+    the same rank compression ``planner.schedule_ir
+    .compile_device_streams`` applies.  Install on the tracer with
+    :meth:`PipelineTracer.set_tick_groups`."""
+    by: Dict[int, List[int]] = {}
+    for i, m in enumerate(round_event_metas(plan)):
+        by.setdefault(m["tick"], []).append(i)
+    return [by[t] for t in sorted(by)]
+
+
 def _reconstruct(metas: Sequence[Dict[str, Any]],
                  durs: Sequence[float]) -> Tuple[List[Span], float]:
     """Lay per-event durations on the IR tick grid (synchronous ticks,
@@ -177,6 +195,7 @@ class PipelineTracer:
         self.step_walls: List[float] = []     # per-step wall seconds
         self.probed: Optional[List[float]] = None
         self.dropped_rounds = 0               # mark-count mismatches
+        self.tick_groups: Optional[List[List[int]]] = None
         self._cur: List[float] = []
         self._t0: Optional[float] = None
 
@@ -185,6 +204,23 @@ class PipelineTracer:
         """Ordered host callback target: one call per compute event, in
         the IR's timeline order (arrival index == event index)."""
         self._cur.append(self.clock())
+
+    def set_tick_groups(self, groups: Sequence[Sequence[int]]) -> None:
+        """Switch to tick-granular marks (the MPMD execution path): one
+        mark per schedule tick instead of one per event
+        (:func:`device_stream_tick_groups`).  Each measured tick
+        duration is attributed to *every* event in that tick — honest
+        for MPMD, where a tick's events run concurrently on different
+        devices and the slowest sets the tick's wall time, but an upper
+        bound per event (the tracer cannot see the intra-tick split
+        from one mark per tick)."""
+        groups = [list(g) for g in groups]
+        covered = sorted(i for g in groups for i in g)
+        if covered != list(range(len(self.metas))):
+            raise ValueError(
+                f"tick groups cover event indices {covered[:8]}..., "
+                f"expected exactly 0..{len(self.metas) - 1}")
+        self.tick_groups = groups
 
     def wrap_step(self, step_fn: Callable) -> Callable:
         """Wrap a (jitted) train step with round bracketing: resets the
@@ -198,10 +234,19 @@ class PipelineTracer:
             wall = self.clock() - self._t0
             self.step_walls.append(wall)
             if self.is_round:
-                if len(self._cur) == len(self.metas):
+                want = (len(self.tick_groups)
+                        if self.tick_groups is not None else len(self.metas))
+                if len(self._cur) == want:
                     ts = [self._t0] + self._cur
-                    self.rounds.append(
-                        [ts[i + 1] - ts[i] for i in range(len(self._cur))])
+                    durs = [ts[i + 1] - ts[i]
+                            for i in range(len(self._cur))]
+                    if self.tick_groups is not None:
+                        ev = [0.0] * len(self.metas)
+                        for t, grp in enumerate(self.tick_groups):
+                            for i in grp:
+                                ev[i] = durs[t]
+                        durs = ev
+                    self.rounds.append(durs)
                 elif self._cur:
                     self.dropped_rounds += 1
             return out

@@ -49,10 +49,12 @@ from repro.planner.partition import (Partition, dp_split,
                                      profile_stage_costs, uniform)
 from repro.planner.profiler import (LayerProfile, ModelProfile,
                                     profile_model, synthetic_profile)
-from repro.planner.schedule_ir import (Event, EventTable, Schedule,
+from repro.planner.schedule_ir import (DeviceStreams, Event, EventTable,
+                                       Schedule, compile_device_streams,
                                        compile_event_table, emit, gpipe,
                                        interleaved_1f1b, one_f_one_b,
-                                       pipedream_2bw, round_compute_program,
+                                       pipedream_2bw, round_compute_events,
+                                       round_compute_program,
                                        round_robin_1f1b, streaming)
 
 __all__ = [
@@ -63,4 +65,5 @@ __all__ = [
     "Event", "Schedule", "emit", "gpipe", "round_robin_1f1b", "streaming",
     "one_f_one_b", "pipedream_2bw", "interleaved_1f1b",
     "EventTable", "compile_event_table", "round_compute_program",
+    "DeviceStreams", "compile_device_streams", "round_compute_events",
 ]

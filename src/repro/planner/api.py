@@ -134,6 +134,16 @@ class PipelinePlan:
         return ir.compile_event_table(self.round_program(), self.n_chunks,
                                       self.round_microbatches)
 
+    def device_streams(self) -> ir.DeviceStreams:
+        """Per-device tick streams of one round — what the shard_map
+        MPMD execution path runs: device ``d`` executes chunks
+        ``d, d+S, …`` from stage-local weights, activations and
+        cotangents cross the stage cuts via ``ppermute``."""
+        base = self.round_microbatches if self.schedule == "2bw" else 0
+        return ir.compile_device_streams(
+            ir.round_compute_events(self.round_ir(), base=base),
+            self.n_chunks, self.round_microbatches, self.n_devices)
+
     def summary(self) -> str:
         v = (f" v={self.virtual_stages}" if self.virtual_stages > 1 else "")
         return (f"plan[{self.schedule} x{self.n_stages}{v} "

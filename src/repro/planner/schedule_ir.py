@@ -668,8 +668,9 @@ COL_B = 6        # fwd:       write slot of v(m,q+1) (the chunk output)
 #                  bwd q<C-1:  read cot slot of c(m,q+1) (output cotangent)
 COL_C = 7        # bwd q>0: write cot slot of c(m,q); else -1
 COL_FIRST_G = 8  # 1 iff this bwd event is chunk q's first grad contribution
-COL_FIRST_O = 9  # 1 iff this event is the first outer-grad contribution
-N_COLS = 10
+COL_FIRST_O = 9  # 1 iff this is the first *head* outer-grad contribution
+COL_FIRST_E = 10  # 1 iff this is the first *embed* outer-grad contribution
+N_COLS = 11
 
 OP_FWD, OP_BWD = 0, 1
 
@@ -705,11 +706,14 @@ class EventTable:
         self.rows.setflags(write=False)
 
 
-def round_compute_program(sched: Schedule, *, base: int = 0
-                          ) -> List[Tuple[str, int, int, int]]:
-    """One round's compute events ``(kind, local_mb, chunk_stage, s)``
+def round_compute_events(sched: Schedule, *, base: int = 0
+                         ) -> List[Tuple[str, int, int, int, int]]:
+    """One round's compute events ``(kind, local_mb, chunk_stage, s, t)``
     in timeline order, with ``s`` the IR-derived weight-version lag of
-    each event's read (the generic SpecTrain prediction distance).
+    each event's read and ``t`` the event's schedule tick (raw — callers
+    normalize).  The tick is what :func:`compile_device_streams` needs
+    to slice the round into per-device event streams; callers that only
+    interpret the global timeline use :func:`round_compute_program`.
 
     ``base`` selects the round's first minibatch: flush schedules repeat
     identically from round 0, 2BW's group 0 still reads the initial
@@ -726,13 +730,22 @@ def round_compute_program(sched: Schedule, *, base: int = 0
             continue
         phase = "forward" if e.kind == FWD else "backward"
         prog.append((e.kind, e.mb - base, e.stage,
-                     sched.staleness(e.stage, phase, e.mb)))
+                     sched.staleness(e.stage, phase, e.mb), e.t))
     want = 2 * M * sched.n_stages
     if len(prog) != want:
         raise ValueError(
             f"{sched.name}: round at base {base} has {len(prog)} compute "
             f"events, expected {want}")
     return prog
+
+
+def round_compute_program(sched: Schedule, *, base: int = 0
+                          ) -> List[Tuple[str, int, int, int]]:
+    """One round's compute events ``(kind, local_mb, chunk_stage, s)``
+    in timeline order — :func:`round_compute_events` with the ticks
+    dropped (the global-timeline interpreters don't need them)."""
+    return [(kind, m, q, s)
+            for kind, m, q, s, _t in round_compute_events(sched, base=base)]
 
 
 def compile_event_table(prog: List[Tuple[str, int, int, int]],
@@ -766,7 +779,7 @@ def compile_event_table(prog: List[Tuple[str, int, int, int]],
         return hwm[pool] - 1
 
     seen_g = set()
-    outer_seen = False
+    head_seen = embed_seen = False
     for kind, m, q, s in prog:
         if not (0 <= m < M and 0 <= q < C):
             raise ValueError(f"event ({kind},{m},{q}) out of range for "
@@ -775,7 +788,7 @@ def compile_event_table(prog: List[Tuple[str, int, int, int]],
         if key not in spec_ix:
             spec_ix[key] = len(specs)
             specs.append(key)
-        fg = fo = 0
+        fg = fo = fe = 0
         if kind == FWD:
             op = OP_FWD
             if (m, q + 1) in val_slot:
@@ -812,10 +825,18 @@ def compile_event_table(prog: List[Tuple[str, int, int, int]],
             if q not in seen_g:
                 seen_g.add(q)
                 fg = 1
-            if (q == C - 1 or q == 0) and not outer_seen:
-                outer_seen = True
+            # the outer grad is accumulated as two independent streams
+            # (head contributions at chunk C-1, embed contributions at
+            # chunk 0) combined once at the end of the round — the
+            # association the MPMD backend can reproduce without
+            # per-event cross-device traffic
+            if q == C - 1 and not head_seen:
+                head_seen = True
                 fo = 1
-        rows.append((spec_ix[key], op, q, m, s, a, b, c, fg, fo))
+            if q == 0 and not embed_seen:
+                embed_seen = True
+                fe = 1
+        rows.append((spec_ix[key], op, q, m, s, a, b, c, fg, fo, fe))
     if val_slot or cot_slot:
         raise ValueError(
             f"round leaves in-flight values: "
@@ -824,3 +845,215 @@ def compile_event_table(prog: List[Tuple[str, int, int, int]],
         n_chunks=C, n_microbatches=M, branches=tuple(specs),
         rows=np.asarray(rows, np.int32),
         n_val_slots=hwm[0], n_cot_slots=hwm[1])
+
+
+# ===========================================================================
+# lowering: one round -> per-device event streams (the MPMD execution
+# path: each pipe device runs its own stream inside shard_map, and
+# activations/cotangents cross stage cuts via ppermute)
+# ===========================================================================
+#
+# Device-stream rows are tick-indexed: ``rows[t, d]`` is what device
+# ``d`` does at synchronous tick ``t`` — at most one compute event (the
+# lax.switch branch id) plus up to one incoming forward activation and
+# one incoming backward cotangent, written into *device-local*
+# value/cotangent pools.  Transfers happen on the producing tick: a
+# forward output crosses to device d+1 (ring), a backward cotangent to
+# device d-1, and the receiver's row says which local slot to park the
+# payload in (−1 → a trash slot; the ring carries garbage on idle
+# ticks so the program stays SPMD).
+
+# row columns (DCOL_* indices into DeviceStreams.rows[t, d])
+DCOL_BRANCH = 0   # lax.switch arm; -1 in the np array is re-written to
+#                   the NOP arm (= len(branches)) before freezing
+DCOL_MB = 1       # microbatch slot m within the round
+DCOL_A = 2        # fwd q==0: write slot of v(m,0); fwd q>0 and bwd:
+#                   read slot of v(m,q) (the chunk input / stashed act)
+DCOL_B = 3        # fwd q==C-1: write slot of v(m,C) (the head input);
+#                   bwd q==C-1: read slot of v(m,C); else -1
+DCOL_C = 4        # bwd q<C-1: read slot of the incoming cotangent
+DCOL_RECV_F = 5   # local val slot for this tick's incoming fwd payload
+DCOL_RECV_B = 6   # local cot slot for this tick's incoming bwd payload
+DCOL_FIRST_G = 7  # 1 iff chunk q's first grad contribution
+DCOL_FIRST_O = 8  # 1 iff the first head outer-grad contribution
+DCOL_FIRST_E = 9  # 1 iff the first embed outer-grad contribution
+DN_COLS = 10
+
+
+@dataclass(frozen=True, eq=False)
+class DeviceStreams:
+    """Per-device tick streams of one schedule round.
+
+    ``rows`` is ``[T, S, DN_COLS]`` int32 — slicing column ``d`` with a
+    ``PartitionSpec(None, 'pipe')`` hands each device exactly its own
+    stream.  Buffer slots are register-allocated **per device**, so
+    ``n_val_slots`` / ``n_cot_slots`` (the max over devices — pools are
+    uniform so the program stays SPMD) are per-device peaks: a chunk's
+    activation stash is spread across the devices that host it instead
+    of replicated, the PR 5 follow-up.  Every device executes the same
+    branch list (a device's rows only ever select its own chunks'
+    branches); arm ``len(branches)`` is the NOP.
+    """
+    n_chunks: int
+    n_microbatches: int
+    n_devices: int
+    branches: Tuple[Tuple[str, int, int], ...]
+    rows: np.ndarray
+    n_val_slots: int
+    n_cot_slots: int
+
+    def __post_init__(self):
+        self.rows.setflags(write=False)
+
+
+def compile_device_streams(events: List[Tuple[str, int, int, int, int]],
+                           n_chunks: int, n_microbatches: int,
+                           n_devices: int) -> DeviceStreams:
+    """Lower a round's compute events (:func:`round_compute_events`) to
+    per-device tick streams (:class:`DeviceStreams`).
+
+    Chunk ``q`` lives on device ``q % n_devices`` (Megatron round-robin
+    folding); ticks are the rank-compressed distinct event start times,
+    so cross-device dependencies are always separated by at least one
+    tick (an event's consumers start strictly after it).  Value
+    lifetimes: a received activation is born on the consumer's device
+    at the *producer's* tick and dies at the consumer chunk's backward;
+    in-branch values (the embed output on device 0, the head input on
+    the last chunk's device) are born at their forward.  Slots freed by
+    a tick's compute may be reused by the same tick's writes — the
+    interpreter reads all branch inputs before writing, and payload
+    receives land after the branch runs.
+    """
+    C, M, S = n_chunks, n_microbatches, n_devices
+    if len(events) != 2 * M * C:
+        raise ValueError(f"program has {len(events)} events, expected "
+                         f"{2 * M * C} (= 2·{M}·{C})")
+    if S < 1 or C % S:
+        raise ValueError(f"{C} chunks do not fold onto {S} devices "
+                         f"(n_chunks % n_devices != 0)")
+    ranks = {t: i for i, t in enumerate(sorted({e[4] for e in events}))}
+    T = len(ranks)
+    by_tick: Dict[int, List[Tuple[str, int, int, int]]] = {}
+    seen_dev: set = set()
+    for kind, m, q, s, t in events:
+        if not (0 <= m < M and 0 <= q < C):
+            raise ValueError(f"event ({kind},{m},{q}) out of range for "
+                             f"M={M}, C={C}")
+        r, d = ranks[t], q % S
+        if (r, d) in seen_dev:
+            raise ValueError(
+                f"device {d} has two compute events at tick {t} — the "
+                f"schedule is not one-event-per-(device, tick)")
+        seen_dev.add((r, d))
+        by_tick.setdefault(r, []).append((kind, m, q, s))
+
+    specs: List[Tuple[str, int, int]] = []
+    spec_ix: Dict[Tuple[str, int, int], int] = {}
+    rows = np.full((T, S, DN_COLS), -1, np.int32)
+    rows[:, :, DCOL_MB] = 0
+    rows[:, :, DCOL_FIRST_G] = 0
+    rows[:, :, DCOL_FIRST_O] = 0
+    rows[:, :, DCOL_FIRST_E] = 0
+
+    # per-device register allocators: [device][pool] min-heap + hwm
+    free = [[[], []] for _ in range(S)]
+    hwm = [[0, 0] for _ in range(S)]
+
+    def alloc(d: int, pool: int) -> int:
+        if free[d][pool]:
+            return heapq.heappop(free[d][pool])
+        hwm[d][pool] += 1
+        return hwm[d][pool] - 1
+
+    val_slot: Dict[Tuple[int, int], int] = {}   # x(m,q) on device q%S
+    out_slot: Dict[int, int] = {}               # v(m,C) on device (C-1)%S
+    cot_slot: Dict[Tuple[int, int], int] = {}   # cot read by bwd(m,q)
+    seen_g: set = set()
+    head_seen = embed_seen = False
+
+    for r in range(T):
+        evs = sorted(by_tick.get(r, ()), key=lambda e: e[2] % S)
+        # phase 1: frees from this tick's reads (before any allocation)
+        for kind, m, q, s in evs:
+            d = q % S
+            if kind != BWD:
+                continue
+            if (m, q) not in val_slot:
+                raise ValueError(f"bwd({m},{q}) before fwd({m},{q}) or "
+                                 f"emitted twice")
+            heapq.heappush(free[d][0], val_slot[(m, q)])
+            if q == C - 1:
+                if m not in out_slot:
+                    raise ValueError(f"bwd({m},{q}) before fwd({m},{q})")
+                heapq.heappush(free[d][0], out_slot[m])
+            elif (m, q) not in cot_slot:
+                raise ValueError(f"bwd({m},{q}) before bwd({m},{q+1})")
+            else:
+                heapq.heappush(free[d][1], cot_slot[(m, q)])
+        # phase 2: the events' own rows + in-branch writes
+        for kind, m, q, s in evs:
+            d = q % S
+            key = (kind, q, s)
+            if key not in spec_ix:
+                spec_ix[key] = len(specs)
+                specs.append(key)
+            row = rows[r, d]
+            row[DCOL_BRANCH] = spec_ix[key]
+            row[DCOL_MB] = m
+            if kind == FWD:
+                if q == 0:
+                    if (m, 0) in val_slot:
+                        raise ValueError(f"fwd({m},0) emitted twice")
+                    val_slot[(m, 0)] = alloc(d, 0)
+                elif (m, q) not in val_slot:
+                    raise ValueError(f"fwd({m},{q}) before fwd({m},{q-1})")
+                row[DCOL_A] = val_slot[(m, q)]
+                if q == C - 1:
+                    if m in out_slot:
+                        raise ValueError(f"fwd({m},{q}) emitted twice")
+                    out_slot[m] = alloc(d, 0)
+                    row[DCOL_B] = out_slot[m]
+            else:
+                row[DCOL_A] = val_slot.pop((m, q))
+                if q == C - 1:
+                    row[DCOL_B] = out_slot.pop(m)
+                else:
+                    row[DCOL_C] = cot_slot.pop((m, q))
+                if q not in seen_g:
+                    seen_g.add(q)
+                    row[DCOL_FIRST_G] = 1
+                if q == C - 1 and not head_seen:
+                    head_seen = True
+                    row[DCOL_FIRST_O] = 1
+                if q == 0 and not embed_seen:
+                    embed_seen = True
+                    row[DCOL_FIRST_E] = 1
+        # phase 3: payload receives on the ring neighbors (land after
+        # the neighbors' branch bodies ran, so freed slots are reusable)
+        for kind, m, q, s in evs:
+            d = q % S
+            if kind == FWD and q < C - 1:
+                nd = (d + 1) % S
+                if (m, q + 1) in val_slot:
+                    raise ValueError(f"fwd({m},{q}) emitted twice")
+                slot = alloc(nd, 0)
+                val_slot[(m, q + 1)] = slot
+                rows[r, nd, DCOL_RECV_F] = slot
+            elif kind == BWD and q > 0:
+                nd = (d - 1) % S
+                slot = alloc(nd, 1)
+                cot_slot[(m, q - 1)] = slot
+                rows[r, nd, DCOL_RECV_B] = slot
+
+    if val_slot or out_slot or cot_slot:
+        raise ValueError(
+            f"round leaves in-flight values: "
+            f"{sorted(val_slot) + sorted(out_slot) + sorted(cot_slot)}")
+    # un-filled branch column -> the NOP arm (a valid switch index)
+    br = rows[:, :, DCOL_BRANCH]
+    br[br < 0] = len(specs)
+    return DeviceStreams(
+        n_chunks=C, n_microbatches=M, n_devices=S, branches=tuple(specs),
+        rows=rows,
+        n_val_slots=max(h[0] for h in hwm),
+        n_cot_slots=max(h[1] for h in hwm))

@@ -21,6 +21,14 @@ state carries — today the ragged per-stage canonical layout
   onto a uniform one and vice versa.  In-flight rings (``w_stash``)
   and per-stage ``shared`` blocks have no flat layer order and raise
   instead of restoring wrong.
+* **packed ↔ ragged**: the MPMD backend stores every chunk's layers in
+  one ``…/stages/layers/…`` leaf ``[v, S, Lmax, ...]`` (chunk q at
+  ``[q//S, q%S]``, zero-padded, partition in a top-level
+  ``chunk_sizes`` leaf).  Both directions route through the same flat
+  layer order: a packed checkpoint strips its padding and repartitions
+  onto ragged (or differently-packed) templates, and a ragged/stacked
+  checkpoint packs onto an MPMD template.  ``chunk_sizes`` itself is
+  plan metadata and always restores from the template's own value.
 """
 from __future__ import annotations
 
@@ -107,6 +115,41 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 # stage-first in both layouts)
 _RAGGED_KEY_RE = re.compile(r"^(.*/|)(stages|w_stash)/(\d+)/(.+)$")
 
+# `<prefix>/stages/layers/<rest>` — the packed MPMD layout: every
+# chunk's layer stack in one `[v, S, Lmax, ...]` leaf (chunk q at
+# `[q//S, q%S]`, zero-padded to Lmax), partition recorded in the
+# sibling top-level `chunk_sizes` leaf.  The spelling collides with
+# the pre-ragged stacked one; `chunk_sizes`'s presence in the
+# checkpoint disambiguates.
+_PACKED_KEY_RE = re.compile(r"^(.*/|)stages/(layers/.+)$")
+
+
+def _pack_group(flat: np.ndarray, sizes, want, key: str) -> np.ndarray:
+    """Serve a packed ``[v, S, Lmax, ...]`` template leaf from a
+    group's flat ``[L, ...]`` layer stack — the ragged→packed restore
+    migration.  Bit-exact on the occupied slots; padding is zero,
+    exactly as ``pack_chunk_params`` writes it."""
+    total = sum(sizes)
+    if flat.shape[0] != total:
+        raise ValueError(
+            f"checkpoint covers {flat.shape[0]} layers for the group of "
+            f"{key!r}, packed template wants {total}")
+    v, S = int(want[0]), int(want[1])
+    if v * S != len(sizes):
+        raise ValueError(
+            f"packed template {key!r} holds {v * S} chunk slots, "
+            f"chunk_sizes has {len(sizes)} entries")
+    if tuple(flat.shape[1:]) != tuple(want[3:]):
+        raise ValueError(
+            f"checkpoint layers for {key!r} have per-layer shape "
+            f"{tuple(flat.shape[1:])}, template wants {tuple(want[3:])}")
+    out = np.zeros(tuple(want), flat.dtype)
+    lo = 0
+    for q, Lq in enumerate(sizes):
+        out[q // S, q % S, :Lq] = flat[lo:lo + Lq]
+        lo += Lq
+    return out
+
 
 def _migrate_stacked_leaf(key: str, data, want_shape) -> Optional[np.ndarray]:
     """Bit-exact shim: serve a ragged per-stage key from a pre-ragged
@@ -192,6 +235,26 @@ def restore(ckpt_dir: str, template: Any, *, step: Optional[int] = None,
     flat = jax.tree_util.tree_flatten_with_path(template)
     group_sizes = _template_group_sizes(flat[0])
     group_cache: dict = {}
+    packed_ckpt = "chunk_sizes" in data.files
+
+    def tmpl_chunk_sizes(key):
+        """The packed *template*'s partition, from its own
+        ``chunk_sizes`` leaf — packing metadata always comes from the
+        template's plan, never the checkpoint (a repartitioned restore
+        changes it)."""
+        for path, leaf in flat[0]:
+            k = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                          for p in path)
+            if k.rsplit(_SEP, 1)[-1] == "chunk_sizes":
+                if not hasattr(leaf, "__array__"):
+                    raise ValueError(
+                        f"restoring packed leaf {key!r} needs the "
+                        f"template's concrete chunk_sizes values, got "
+                        f"{type(leaf).__name__}")
+                return tuple(int(s) for s in np.asarray(leaf))
+        raise KeyError(
+            f"packed template leaf {key!r} has no sibling chunk_sizes "
+            f"leaf to define its partition")
 
     def ckpt_group(prefix, rest):
         """(per-stage layer counts, flat [L, ...] concat) of one leaf
@@ -206,7 +269,24 @@ def restore(ckpt_dir: str, template: Any, *, step: Optional[int] = None,
             while f"{prefix}stages/{j}/{rest}" in data.files:
                 parts.append(data[f"{prefix}stages/{j}/{rest}"])
                 j += 1
-            if not parts and f"{prefix}stages/{rest}" in data.files:
+            if not parts and packed_ckpt and \
+                    f"{prefix}stages/{rest}" in data.files:
+                # packed MPMD spelling: [v, S, Lmax, ...] with chunk q
+                # at [q//S, q%S]; strip each chunk's padding back to
+                # its chunk_sizes[q] real layers — the flat layer
+                # order, bit-exact
+                a = data[f"{prefix}stages/{rest}"]
+                sizes = tuple(int(s) for s in data["chunk_sizes"])
+                v, S = int(a.shape[0]), int(a.shape[1])
+                if v * S != len(sizes):
+                    raise ValueError(
+                        f"packed checkpoint leaf for {rest!r} holds "
+                        f"{v * S} chunk slots, its chunk_sizes has "
+                        f"{len(sizes)} entries")
+                a2 = a.reshape((v * S,) + a.shape[2:])
+                group_cache[g] = (sizes, np.concatenate(
+                    [a2[q, :Lq] for q, Lq in enumerate(sizes)], axis=0))
+            elif not parts and f"{prefix}stages/{rest}" in data.files:
                 # pre-ragged stacked spelling: [S, Lps, ...] is the
                 # same flat layer order, so it repartitions onto any
                 # template sizes too (uniform templates keep taking
@@ -230,7 +310,12 @@ def restore(ckpt_dir: str, template: Any, *, step: Optional[int] = None,
         want = tuple(getattr(leaf, "shape", np.shape(leaf)))
         arr = None
         m = _RAGGED_KEY_RE.match(key)
-        if m is not None and m.group(2) == "stages" and \
+        if key.rsplit(_SEP, 1)[-1] == "chunk_sizes":
+            # plan metadata, not learned state: the template's own
+            # partition always wins (the checkpoint's describes the
+            # layout it was *written* under)
+            arr = np.asarray(tmpl_chunk_sizes(key), np.int32)
+        elif m is not None and m.group(2) == "stages" and \
                 m.group(4).startswith("layers" + _SEP):
             # repartitioning is a *group* decision: compare the full
             # stage-size vectors, never per-leaf shapes — a stage whose
@@ -239,9 +324,23 @@ def restore(ckpt_dir: str, template: Any, *, step: Optional[int] = None,
             grp = group_sizes.get((m.group(1), m.group(4)), {})
             tmpl_vec = tuple(grp[j] for j in sorted(grp))
             c_vec, c_flat = ckpt_group(m.group(1), m.group(4))
-            if c_vec and c_vec != tmpl_vec:
+            if c_vec and (c_vec != tmpl_vec or packed_ckpt):
+                # a packed checkpoint always routes through the flat
+                # concat: its stacked-look-alike spelling must not hit
+                # the per-stage stacked shim below
                 arr = _repartition_slice(c_flat, grp, int(m.group(3)),
                                          want, key)
+        elif m is None:
+            pm = _PACKED_KEY_RE.match(key)
+            if pm is not None:
+                c_vec, c_flat = ckpt_group(pm.group(1), pm.group(2))
+                if c_flat is not None:
+                    sizes = tmpl_chunk_sizes(key)
+                    if not (c_vec == sizes and key in data.files and
+                            tuple(data[key].shape) == want):
+                        arr = _pack_group(c_flat, sizes, want, key)
+                    # else: identical packing — fall through to the
+                    # direct load below
         if arr is None and key in data.files:
             arr = data[key]
             if tuple(arr.shape) != want:

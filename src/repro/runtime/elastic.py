@@ -16,8 +16,31 @@ from typing import Any, Dict, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.models.model import (flat_stage_layers, split_flat_stages,
-                                uniform_stage_sizes)
+from repro.models.model import (flat_stage_layers, pack_chunk_params,
+                                split_flat_stages, uniform_stage_sizes,
+                                unpack_chunk_params)
+
+
+def unpack_mpmd_state(state: Dict[str, Any]) -> Dict[str, Any]:
+    """Packed MPMD training state -> the ragged canonical layout.
+
+    Detected by the top-level ``chunk_sizes`` leaf the packed layout
+    carries; params/momentum (and the 2BW stash, when present) unpack
+    to per-chunk ragged trees so one repartition path serves every
+    source layout."""
+    sizes = tuple(int(s) for s in jax.device_get(state["chunk_sizes"]))
+
+    def un(tree):
+        return {"outer": tree["outer"],
+                "stages": unpack_chunk_params(tree["stages"], sizes)}
+
+    out = {k: v for k, v in state.items() if k != "chunk_sizes"}
+    out["params"] = un(state["params"])
+    out["momentum"] = un(state["momentum"])
+    if "stash" in state:
+        out["stash"] = {"params": un(state["stash"]["params"]),
+                        "momentum": un(state["stash"]["momentum"])}
+    return out
 
 
 def restack_stages(stages: Any, new_pipe: int) -> Any:
@@ -86,7 +109,8 @@ def reshard_params(params: Dict[str, Any], *, new_pipe: int,
 def elastic_restate(model_old, model_new, state: Dict[str, Any],
                     batch_sds, *, mode: str = "spectrain",
                     ticks_per_step: int = 1, plan=None,
-                    registry=None) -> Dict[str, Any]:
+                    registry=None, exec: str = "spmd",
+                    mesh=None) -> Dict[str, Any]:
     """Full state transition between two Model instances (new mesh plan).
 
     ``plan``: optional ``repro.planner.PipelinePlan`` for the *new*
@@ -101,13 +125,26 @@ def elastic_restate(model_old, model_new, state: Dict[str, Any],
     (uniform, remainder-first) partition is used — ragged layer counts
     restate fine; the only hard error is a stage that would be empty.
 
+    ``exec`` / ``mesh``: execution backend for the *new* IR state —
+    ``"mpmd"`` packs the repartitioned weights and momentum into the
+    stage-local layout and places them on the pipe mesh (see
+    ``pipeline_stream.make_ir_state``); a packed *input* state is
+    detected by its ``chunk_sizes`` leaf and unpacked first, so
+    elastic events move freely between the two backends.
+
     ``registry``: optional ``obs.MetricsRegistry`` — the transition is
     recorded as one ``elastic_restate`` event (old/new pipe width,
     schedule, carried step).
     """
     from repro.core import pipeline_stream
+    if "chunk_sizes" in state:
+        state = unpack_mpmd_state(state)
     ir_plan = plan is not None and \
         plan.schedule in pipeline_stream.IR_SCHEDULES
+    if exec != "spmd" and not ir_plan:
+        raise ValueError(
+            f"exec={exec!r} needs an IR-schedule plan "
+            f"({pipeline_stream.IR_SCHEDULES})")
     if plan is not None:
         sizes: Any = plan.partition.sizes()
     else:
@@ -116,7 +153,8 @@ def elastic_restate(model_old, model_new, state: Dict[str, Any],
                             sizes=sizes)
     if ir_plan:
         new_state = pipeline_stream.make_ir_state(
-            model_new, params, batch_sds, plan=plan, mode=mode)
+            model_new, params, batch_sds, plan=plan, mode=mode,
+            exec=exec, mesh=mesh)
     else:
         new_state = pipeline_stream.make_state(
             model_new, params, batch_sds, mode=mode,
@@ -127,7 +165,15 @@ def elastic_restate(model_old, model_new, state: Dict[str, Any],
     mom_stages = reshard_params(
         {"stages": state["momentum"]["stages"]},
         new_pipe=model_new.n_stages, sizes=sizes)["stages"]
-    if not isinstance(new_state["params"]["stages"], (tuple, list)):
+    if ir_plan and exec == "mpmd":
+        # the packed backend mirrors the packed param layout (and its
+        # placement) for the carried momentum
+        packed_mom, _ = pack_chunk_params(
+            list(mom_stages), plan.n_devices)
+        mom_stages = jax.device_put(
+            packed_mom, jax.tree.map(lambda x: x.sharding,
+                                     new_state["momentum"]["stages"]))
+    elif not isinstance(new_state["params"]["stages"], (tuple, list)):
         # non-pipelined stage layouts (enc-dec) pass through unchanged
         mom_stages = state["momentum"]["stages"]
     new_state["momentum"] = {"outer": state["momentum"]["outer"],
@@ -144,5 +190,5 @@ def elastic_restate(model_old, model_new, state: Dict[str, Any],
             "elastic_restate",
             old_pipe=model_old.n_stages, new_pipe=model_new.n_stages,
             schedule=(plan.schedule if plan is not None else "stream"),
-            step=int(state["step"]))
+            exec=exec, step=int(state["step"]))
     return new_state

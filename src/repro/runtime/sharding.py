@@ -131,28 +131,84 @@ _is_axes = lambda x: isinstance(x, tuple) and all(
 
 
 def stage_submeshes(mesh: Mesh, n_stages: int):
-    """Per-pipe-coordinate sub-meshes, or None when the mesh cannot be
-    split that way (no ``pipe`` axis, or its size != ``n_stages``).
+    """Per-pipe-coordinate sub-meshes: one per pipe index, stage (or
+    chunk) ``i`` folding onto sub-mesh ``i % pipe_size``.
 
     Sub-mesh ``k`` holds every device at pipe index ``k`` and keeps the
     remaining mesh axes, so within one stage the usual data/tensor
     sharding rules still apply — only the ``pipe`` axis is consumed by
-    *placement* instead of a PartitionSpec."""
+    *placement* instead of a PartitionSpec.
+
+    A pipe axis smaller than ``n_stages`` is accepted when it divides it
+    (Megatron round-robin folding — the same ``i % S`` rule virtual
+    stages already use); a mesh with no ``pipe`` axis, or one that does
+    not divide the stage count, cannot place the stages and raises
+    instead of silently returning nothing."""
     names = mesh.axis_names
     if "pipe" not in names:
-        return None
+        raise ValueError(
+            f"mesh axes {dict(zip(names, mesh.devices.shape))} have no "
+            f"'pipe' axis to place {n_stages} pipeline stages on")
     axis = names.index("pipe")
-    if mesh.devices.shape[axis] != n_stages:
-        return None
+    pipe = mesh.devices.shape[axis]
+    if n_stages % pipe:
+        raise ValueError(
+            f"'pipe' axis of size {pipe} cannot place {n_stages} stages: "
+            f"stage count must be a multiple of the pipe size so stages "
+            f"fold round-robin (stage i -> pipe index i % {pipe})")
     sub_names = tuple(n for n in names if n != "pipe")
     subs = []
-    for k in range(n_stages):
+    for k in range(pipe):
         devs = np.take(mesh.devices, k, axis=axis)
         if not sub_names:       # pure-pipe mesh: one device per stage
             subs.append(Mesh(devs.reshape(1), ("_stage_local",)))
         else:
             subs.append(Mesh(devs, sub_names))
     return subs
+
+
+def mpmd_pipe_mesh(n_devices: int, devices=None) -> Mesh:
+    """The default 1-D ``('pipe',)`` mesh the MPMD execution path runs
+    over: the first ``n_devices`` local devices, one pipeline stage
+    each."""
+    devs = list(jax.devices() if devices is None else devices)
+    if len(devs) < n_devices:
+        raise ValueError(
+            f"mpmd needs {n_devices} devices for the pipe axis, have "
+            f"{len(devs)} (set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n_devices} to fake them on CPU)")
+    return Mesh(np.asarray(devs[:n_devices]), ("pipe",))
+
+
+def mpmd_state_shardings(mesh: Mesh, state_sds: Dict[str, Any]):
+    """NamedShardings for the packed MPMD train state.
+
+    Every packed ``stages`` leaf is ``[v, S, Lmax, ...]`` with chunk
+    ``q`` at index ``[q // S, q % S]`` (``models.model.pack_chunk_params``)
+    — ``P(None, 'pipe')`` on dim 1 therefore pins each chunk's weights,
+    momentum and 2BW stash wholly to its pipe device; the outer
+    (embed/head) weights, step counter and ``chunk_sizes`` vector stay
+    replicated."""
+    packed = NamedSharding(mesh, P(None, "pipe"))
+    rep = NamedSharding(mesh, P())
+
+    def params_like(t):
+        return {"outer": jax.tree.map(lambda _: rep, t["outer"]),
+                "stages": jax.tree.map(lambda _: packed, t["stages"])}
+
+    out: Dict[str, Any] = {
+        "params": params_like(state_sds["params"]),
+        "momentum": params_like(state_sds["momentum"]),
+        "step": rep,
+    }
+    if "chunk_sizes" in state_sds:
+        out["chunk_sizes"] = rep
+    if "stash" in state_sds:
+        out["stash"] = {
+            "params": params_like(state_sds["stash"]["params"]),
+            "momentum": params_like(state_sds["stash"]["momentum"]),
+        }
+    return out
 
 
 def _stage_tree_shardings(model, stages_sds, mesh_of, rules,
@@ -300,10 +356,6 @@ def stage_placement_shardings(model, state_sds: Dict[str, Any], mesh: Mesh,
     placement *map*, not a jit sharding — rings/outer stay on the full
     mesh, stage weights live only on their stage's devices."""
     subs = stage_submeshes(mesh, model.n_stages)
-    if subs is None:
-        raise ValueError(
-            f"mesh {dict(axis_sizes(mesh))} has no pipe axis of size "
-            f"{model.n_stages} to place {model.n_stages} stages on")
     return _state_shardings(model, state_sds, mesh, rules, zero1=zero1,
                             stage_mesh_of=lambda i: subs[i % len(subs)])
 

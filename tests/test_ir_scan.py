@@ -74,9 +74,17 @@ class TestEventTable:
             assert (inner_bwd[:, sir.COL_C] >= 0).all()
             assert (inner_bwd[:, sir.COL_C] < t.n_cot_slots).all()
         assert (bwd[bwd[:, sir.COL_CHUNK] == 0][:, sir.COL_C] == -1).all()
-        # exactly one first-contribution marker per chunk / per outer
+        # exactly one first-contribution marker per chunk, one for the
+        # head outer grad (bwd of chunk C-1) and one for the embed outer
+        # grad (bwd of chunk 0) — the two outer accumulators are kept
+        # separate so every backend sums them in the same order
         assert bwd[:, sir.COL_FIRST_G].sum() == C
         assert rows[:, sir.COL_FIRST_O].sum() == 1
+        assert rows[:, sir.COL_FIRST_E].sum() == 1
+        assert (rows[rows[:, sir.COL_FIRST_O] > 0][:, sir.COL_CHUNK]
+                == C - 1).all()
+        assert (rows[rows[:, sir.COL_FIRST_E] > 0][:, sir.COL_CHUNK]
+                == 0).all()
 
     def test_wv_column_matches_schedule_family(self):
         flush = _mk_plan("1f1b", 2).event_table()
