@@ -2,7 +2,7 @@
 P2P-idle / imbalance-idle) of Data-P vs Model-P, normalized to Data-P."""
 from __future__ import annotations
 
-from benchmarks._timeline import (dp_step_time, lm_models, paper_models,
+from benchmarks._timeline import (dp_step_time, paper_models,
                                   pipeline_step_time)
 
 

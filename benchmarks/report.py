@@ -88,7 +88,7 @@ def summary(rows) -> str:
                      f"({worst['arch']}/{worst['shape']}/{worst['mesh']}) "
                      f"to {best['roofline_fraction']:.3f} "
                      f"({best['arch']}/{best['shape']}/{best['mesh']})")
-        lines.append(f"- collective-bound cells: "
+        lines.append("- collective-bound cells: "
                      + ", ".join(f"{r['arch']}/{r['shape']}/{r['mesh']}"
                                  for r in collb[:8]))
     return "\n".join(lines)

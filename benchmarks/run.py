@@ -25,7 +25,8 @@ def main() -> int:
 
     from benchmarks import (breakdown, comm_time, comm_volume, convergence,
                             ir_compile, kernel_bench, planner_bench, rmse,
-                            roofline, throughput, trace_overhead)
+                            roofline, throughput, trace_overhead,
+                            verifier_bench)
     benches = {
         "comm_volume": comm_volume.main,      # Fig. 3
         "comm_time": comm_time.main,          # Fig. 4
@@ -38,6 +39,7 @@ def main() -> int:
         "planner": planner_bench.main,        # EXPERIMENTS.md §Planner
         "ir_compile": ir_compile.main,        # EXPERIMENTS.md §IR backends
         "trace_overhead": trace_overhead.main,  # docs/OBSERVABILITY.md
+        "verifier": verifier_bench.main,      # planner/verify.py gate
     }
     picked = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

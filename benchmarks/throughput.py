@@ -2,8 +2,7 @@
 4 GPUs, normalized to single-GPU."""
 from __future__ import annotations
 
-from benchmarks._timeline import (lm_models, paper_models,
-                                  pipeline_step_time, throughput)
+from benchmarks._timeline import paper_models, throughput
 
 
 def main(fast: bool = True):

@@ -1,0 +1,64 @@
+"""Verifier benchmark: static verification time per compiled plan.
+
+The verifier (``planner/verify.py``) runs by default at IR-runtime
+construction, so its cost rides on every ``make_ir_train_step`` call —
+this row keeps it honest under the PR 5 regression gate.
+
+Rows:
+  verifier/plan/<spec>     — full ``verify_plan`` time (event table +
+                             device streams, artifacts re-compiled per
+                             call, i.e. the construction-time cost);
+                             derived shows events checked and
+                             violations found (must be 0).
+  verifier/largest_grid    — the largest plan in the CI verify grid
+                             (interleaved S=4, v=2: 256 events across
+                             both artifacts).
+"""
+from __future__ import annotations
+
+import time
+
+
+def _plan(schedule: str, S: int, v: int = 1):
+    from repro.planner import plan, synthetic_profile
+    C = S * v
+    return plan(profile=synthetic_profile([1.0] * (2 * C)), n_stages=S,
+                schedule=schedule, virtual_stages=v,
+                partitioner="uniform")
+
+
+def _time_verify(p, reps: int):
+    from repro.planner import verify as pv
+    reports = pv.verify_plan(p)     # warm (emitter caches, imports)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        reports = pv.verify_plan(p)
+    us = (time.perf_counter() - t0) / reps * 1e6
+    n_ev = sum(r.n_events for r in reports)
+    n_bad = sum(len(r.violations) for r in reports)
+    return us, n_ev, n_bad
+
+
+def main(fast: bool = True):
+    lines = []
+    reps = 3 if fast else 10
+    specs = [("1f1b", 2, 1), ("2bw", 4, 1)] if fast else \
+            [("1f1b", 2, 1), ("1f1b", 4, 1), ("2bw", 4, 1),
+             ("gpipe", 4, 1), ("interleaved", 2, 2)]
+    for schedule, S, v in specs:
+        p = _plan(schedule, S, v)
+        us, n_ev, n_bad = _time_verify(p, reps)
+        tag = f"{schedule}_S{S}" + (f"v{v}" if v > 1 else "")
+        lines.append(f"verifier/plan/{tag},{us:.0f},"
+                     f"events={n_ev};violations={n_bad}")
+    # the largest cell of the CI verify grid
+    p = _plan("interleaved", 4, 2)
+    us, n_ev, n_bad = _time_verify(p, reps)
+    lines.append(f"verifier/largest_grid,{us:.0f},"
+                 f"events={n_ev};violations={n_bad}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

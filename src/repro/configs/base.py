@@ -7,7 +7,6 @@ sharding rules, pipeline plans and the dry-run all read from here.
 from __future__ import annotations
 
 import dataclasses
-import math
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
 
@@ -119,7 +118,7 @@ class ArchConfig:
     # which shapes this arch supports (long_500k only for sub-quadratic)
     supports_long_context: bool = False
 
-    # ------------------------------------------------------------------ derived
+    # ----------------------------------------------------------- derived
     @property
     def hd(self) -> int:
         return self.head_dim if self.head_dim else self.d_model // self.n_heads

@@ -9,7 +9,8 @@ from repro.configs.base import ArchConfig, MeshPlan, register
 @register("pixtral-12b")
 def config() -> ArchConfig:
     return ArchConfig(
-        name="pixtral-12b", family="vlm", source="hf:mistralai/Pixtral-12B-2409",
+        name="pixtral-12b", family="vlm",
+        source="hf:mistralai/Pixtral-12B-2409",
         n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, head_dim=128,
         d_ff=14336, vocab_size=131072,
         mlp_gated=True, norm="rmsnorm", pos_embed="rope", rope_theta=1e6,

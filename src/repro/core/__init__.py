@@ -1,4 +1,5 @@
 # The paper's primary contribution: SpecTrain weight prediction and the
 # pipelined model-parallel runtimes (sync circular + async streaming), plus
 # the paper-exact event simulator used for convergence reproductions.
-from repro.core import pipeline_stream, pipeline_sync, simulator, spectrain  # noqa: F401
+from repro.core import pipeline_stream, pipeline_sync  # noqa: F401
+from repro.core import simulator, spectrain  # noqa: F401

@@ -21,10 +21,9 @@ Zhang et al.'s staleness-dependent learning-rate scaling is available via
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import spectrain as st
 from repro.optim import sgd

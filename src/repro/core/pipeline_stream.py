@@ -479,6 +479,16 @@ def _trace_mark(tracer, dep):
     io_callback(lambda _t: tracer._mark(), None, tok, ordered=True)
 
 
+def _unsupported(combo: str, why: str, use: str) -> NotImplementedError:
+    """Structured ``NotImplementedError`` for unsupported feature
+    combinations: names the combination, the reason it is out of scope,
+    and the supported alternative — one fixed shape so every gate reads
+    the same (tests pin all three parts)."""
+    return NotImplementedError(
+        f"unsupported combination: {combo} — {why}; "
+        f"supported alternative: {use}")
+
+
 def _ir_plan_check(model, plan) -> Tuple[int, ...]:
     """Validate a plan as an executable artifact for the IR interpreter;
     returns the per-chunk layer counts."""
@@ -509,9 +519,13 @@ def _ir_plan_check(model, plan) -> Tuple[int, ...]:
                          f"(round_microbatches={plan.round_microbatches})")
     depth = max(plan.w_stash_depth) if plan.w_stash_depth else 1
     if depth > 2:
-        raise NotImplementedError(
-            f"IR-derived weight-stash depth {depth} > 2: only "
-            f"single-buffer and 2BW double-buffer reads are implemented")
+        raise _unsupported(
+            f"a {plan.schedule!r} plan with IR-derived weight-stash "
+            f"depth {depth}",
+            "the interpreter implements only single-buffer and 2BW "
+            "double-buffer weight reads (depth <= 2)",
+            "a schedule whose IR derives depth <= 2 (1f1b, gpipe, "
+            "interleaved, 2bw)")
     return sizes
 
 
@@ -529,7 +543,7 @@ def _round_program(plan):
 
 def make_ir_state(model, params, batch_sds, *, plan,
                   mode: str = "spectrain", exec: str = "spmd",
-                  mesh=None) -> Dict[str, Any]:
+                  mesh=None, verify: bool = True) -> Dict[str, Any]:
     """Train state for the IR interpreter: chunked params + momentum
     (+ the 2BW double buffer when the IR derives a stash depth of 2).
 
@@ -556,6 +570,8 @@ def make_ir_state(model, params, batch_sds, *, plan,
         raise ValueError(f"unknown exec {exec!r}; known: {EXECS}")
     del batch_sds  # interpreter state holds no rings; shape-agnostic
     sizes = _ir_plan_check(model, plan)
+    if verify:
+        plan.verify()   # static artifact verification (planner/verify.py)
     chunks = model.partition_stage_params(params["stages"], sizes,
                                           n_chunks=plan.n_chunks)
     if exec == "mpmd":
@@ -563,9 +579,11 @@ def make_ir_state(model, params, batch_sds, *, plan,
         from repro.runtime import sharding as rsh
 
         if model.hybrid:
-            raise NotImplementedError(
-                "mpmd: hybrid per-stage 'shared' blocks have no flat "
-                "layer order to pack; use exec='spmd'")
+            raise _unsupported(
+                "exec='mpmd' with a hybrid SSM/attention model",
+                "per-stage 'shared' blocks have no flat layer order to "
+                "pack into the [v, S, Lmax] stage-local layout",
+                "exec='spmd' (runs hybrid models with every schedule)")
         mesh = _mpmd_mesh(mesh, plan.n_devices)
         packed, psizes = pack_chunk_params(chunks, plan.n_devices)
         assert psizes == tuple(sizes), (psizes, sizes)
@@ -601,7 +619,8 @@ def make_ir_state(model, params, batch_sds, *, plan,
 def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
                        gamma: float = 0.9, clip: Optional[float] = None,
                        backend: str = "scan", tracer=None,
-                       exec: str = "spmd", mesh=None) -> Callable:
+                       exec: str = "spmd", mesh=None,
+                       verify: bool = True) -> Callable:
     """Schedule-driven step: one call executes one flush round (gpipe /
     1f1b / interleaved) or one 2BW accumulation group of
     ``plan.round_microbatches`` microbatches, by interpreting the IR's
@@ -652,6 +671,12 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
     memory.  ``backend`` applies to the SPMD path only; mpmd requires
     the matching ``make_ir_state(..., exec="mpmd")`` packed state and
     refuses ``clip`` and hybrid models.
+
+    ``verify=True`` (the default) statically verifies the plan's
+    compiled artifacts before building the step — slot dataflow, ring
+    comm matching, closed-form staleness, completeness, exact resource
+    bounds (``planner/verify.py``); ``verify=False`` skips it (the
+    launcher's ``--no-verify``).
     """
     assert mode in MODES, mode
     if backend not in IR_BACKENDS:
@@ -659,16 +684,21 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
             f"unknown IR backend {backend!r}; known: {IR_BACKENDS}")
     if exec not in EXECS:
         raise ValueError(f"unknown exec {exec!r}; known: {EXECS}")
+    if verify and plan is not None and plan.schedule in IR_SCHEDULES:
+        plan.verify()   # static artifact verification (planner/verify.py)
     if exec == "mpmd":
         if clip:
-            raise NotImplementedError(
-                "mpmd + clip_by_global_norm: the global norm's "
-                "canonical-order reduction is not bit-reproducible on "
-                "the packed stage layout; use exec='spmd'")
+            raise _unsupported(
+                "exec='mpmd' with clip_by_global_norm",
+                "the global norm's canonical-order reduction is not "
+                "bit-reproducible on the packed stage layout",
+                "exec='spmd' with clip, or exec='mpmd' with clip=None")
         if model.hybrid:
-            raise NotImplementedError(
-                "mpmd: hybrid per-stage 'shared' blocks have no flat "
-                "layer order to pack; use exec='spmd'")
+            raise _unsupported(
+                "exec='mpmd' with a hybrid SSM/attention model",
+                "per-stage 'shared' blocks have no flat layer order to "
+                "pack into the [v, S, Lmax] stage-local layout",
+                "exec='spmd' (runs hybrid models with every schedule)")
         return _make_mpmd_step(model, plan=plan, mode=mode, lr=lr,
                                gamma=gamma, tracer=tracer, mesh=mesh)
     sizes = _ir_plan_check(model, plan)

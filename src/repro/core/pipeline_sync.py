@@ -11,12 +11,12 @@ staleness-free reference in every convergence test.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import shard_act, softmax_xent
+from repro.models.layers import shard_act
 from repro.optim import sgd
 
 

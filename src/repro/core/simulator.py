@@ -23,7 +23,6 @@ in order therefore only ever references versions that already exist.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 

@@ -1,1 +1,2 @@
-from repro.data.pipeline import DataConfig, SyntheticLM, make_iterator  # noqa: F401
+from repro.data.pipeline import (DataConfig, SyntheticLM,  # noqa: F401
+                                 make_iterator)

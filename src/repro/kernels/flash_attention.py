@@ -26,7 +26,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 # pallas renamed TPUCompilerParams -> CompilerParams in newer jax
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+_CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                   or pltpu.TPUCompilerParams)
 
 NEG_INF = -1e30
 
@@ -73,9 +74,9 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
 
     @pl.when(ik == nk - 1)
     def _done():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
-        lse_ref[0, 0] = m_scr[...] + jnp.log(l)
+        lsum = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / lsum[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = m_scr[...] + jnp.log(lsum)
 
 
 def flash_fwd(q, k, v, *, causal: bool = True, block_q: int = 128,
@@ -99,12 +100,16 @@ def flash_fwd(q, k, v, *, causal: bool = True, block_q: int = 128,
         kernel,
         grid=(b, h, nq, nk),
         in_specs=[
-            pl.BlockSpec((1, 1, block_q, d), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_k, d), lambda b, h, iq, ik: (b, h, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, d), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, iq, ik: (b, h, ik, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, block_q, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
             pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
         ],
         out_shape=[
@@ -228,10 +233,14 @@ def flash_bwd(q, k, v, o, lse, do, *, causal: bool = True,
                           nk=nk),
         grid=(b, h, nq, nk),
         in_specs=[
-            pl.BlockSpec((1, 1, block_q, d), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_k, d), lambda b, h, iq, ik: (b, h, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, d), lambda b, h, iq, ik: (b, h, ik, 0)),
-            pl.BlockSpec((1, 1, block_q, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
             pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
             pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
         ],
@@ -251,16 +260,22 @@ def flash_bwd(q, k, v, o, lse, do, *, causal: bool = True,
                           nq=nq),
         grid=(b, h, nk, nq),
         in_specs=[
-            pl.BlockSpec((1, 1, block_q, d), lambda b, h, ik, iq: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_k, d), lambda b, h, ik, iq: (b, h, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, d), lambda b, h, ik, iq: (b, h, ik, 0)),
-            pl.BlockSpec((1, 1, block_q, d), lambda b, h, ik, iq: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b, h, ik, iq: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, ik, iq: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, ik, iq: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b, h, ik, iq: (b, h, iq, 0)),
             pl.BlockSpec((1, 1, block_q), lambda b, h, ik, iq: (b, h, iq)),
             pl.BlockSpec((1, 1, block_q), lambda b, h, ik, iq: (b, h, iq)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, block_k, d), lambda b, h, ik, iq: (b, h, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, d), lambda b, h, ik, iq: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, ik, iq: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, ik, iq: (b, h, ik, 0)),
         ],
         out_shape=[jax.ShapeDtypeStruct(k.shape, k.dtype),
                    jax.ShapeDtypeStruct(v.shape, v.dtype)],

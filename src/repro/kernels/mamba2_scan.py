@@ -20,7 +20,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 # pallas renamed TPUCompilerParams -> CompilerParams in newer jax
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+_CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                   or pltpu.TPUCompilerParams)
 
 _EPS = 1e-24
 

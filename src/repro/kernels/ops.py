@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

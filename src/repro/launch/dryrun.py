@@ -18,7 +18,8 @@ from repro.configs import (SHAPES, get_config, list_archs,  # noqa: E402
                            shape_applicable, smoke_config)
 from repro.configs.base import MeshPlan  # noqa: E402
 from repro.core import pipeline_stream, pipeline_sync  # noqa: E402
-from repro.launch.mesh import make_production_mesh, make_smoke_mesh  # noqa: E402
+from repro.launch.mesh import (make_production_mesh,  # noqa: E402
+                               make_smoke_mesh)
 from repro.models import Model, input_specs  # noqa: E402
 from repro.models.layers import use_rules  # noqa: E402
 from repro.models.model import cache_axes  # noqa: E402
@@ -344,7 +345,8 @@ def main(argv=None) -> int:
     cells = []
     archs = list_archs() if (args.all or not args.arch) else [args.arch]
     shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
-    meshes = [False, True] if (args.both_meshes or args.all) else [args.multipod]
+    meshes = ([False, True] if (args.both_meshes or args.all)
+              else [args.multipod])
     failures = 0
     for arch in archs:
         for shape in shapes:
@@ -368,7 +370,8 @@ def main(argv=None) -> int:
                 except Exception as e:  # noqa: BLE001
                     rec = {"arch": arch, "shape": shape,
                            "mesh": "2x16x16" if mp else "16x16",
-                           "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                           "status": "fail",
+                           "error": f"{type(e).__name__}: {e}"}
                     failures += 1
                 cells.append(rec)
                 line = {k: v for k, v in rec.items()

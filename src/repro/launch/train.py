@@ -32,15 +32,12 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.configs.base import MeshPlan
 from repro.core import pipeline_stream, pipeline_sync
 from repro.data import DataConfig, SyntheticLM
 from repro.models import Model
@@ -48,7 +45,6 @@ from repro.obs import (MetricsRegistry, PipelineTracer,
                        device_stream_tick_groups, drift_report,
                        format_drift, format_step, probe_stage_costs,
                        write_trace)
-from repro.optim import compression, sgd
 from repro.planner import check_against_closed_forms, plan as make_plan
 from repro.runtime import checkpoint as ckpt
 
@@ -117,6 +113,10 @@ def main(argv=None) -> int:
                          "activations cross stage cuts via ppermute); "
                          "bitwise-identical results, 1/S the per-device "
                          "weight memory (needs >= --pipe devices)")
+    ap.add_argument("--no-verify", action="store_true", dest="no_verify",
+                    help="skip the static schedule verifier "
+                         "(planner/verify.py) that IR-schedule runs "
+                         "execute by default at step construction")
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
@@ -207,7 +207,8 @@ def main(argv=None) -> int:
             raise SystemExit(
                 f"no round size for --schedule {schedule}: need a "
                 f"divisor of --batch {args.batch} that is "
-                f"{'a multiple of' if schedule == 'interleaved' else 'at least'} "
+                + ('a multiple of' if schedule == 'interleaved'
+                   else 'at least') + " "
                 f"--pipe {S}" + (f" (got --ticks {M})" if M else ""))
         plan_kw["n_microbatches"] = M
     pplan = make_plan(
@@ -245,11 +246,12 @@ def main(argv=None) -> int:
     elif schedule in pipeline_stream.IR_SCHEDULES:
         state = pipeline_stream.make_ir_state(
             model, model.init(key), batch_sds, plan=pplan,
-            mode=args.mode, exec=args.exec)
+            mode=args.mode, exec=args.exec, verify=not args.no_verify)
         step_fn = pipeline_stream.make_ir_train_step(
             model, plan=pplan, mode=args.mode, lr=args.lr,
             gamma=args.gamma, clip=args.clip or None,
-            backend=args.ir_backend, exec=args.exec, tracer=tracer)
+            backend=args.ir_backend, exec=args.exec, tracer=tracer,
+            verify=not args.no_verify)
         if tracer is not None and args.exec == "mpmd":
             # the mpmd round runs T device-stream ticks, not one host
             # mark per compute event — map tick marks back onto the

@@ -91,7 +91,8 @@ def gqa_apply(cfg, p, x, *, pos_offset: int = 0, causal: bool = True,
             q_pos = jnp.asarray(pos).reshape((1,))
         q = apply_rope(q, q_pos[None, :], inv)
         if cache is None or kv_input is not None or s > 1:
-            k = apply_rope(k, (jnp.arange(src.shape[1]) + pos_offset)[None, :], inv)
+            k = apply_rope(
+                k, (jnp.arange(src.shape[1]) + pos_offset)[None, :], inv)
         else:
             k = apply_rope(k, q_pos[None, :], inv)
     else:
@@ -216,7 +217,8 @@ def mla_apply(cfg, p, x, *, pos_offset: int = 0, causal: bool = True,
         out = out.reshape(b, s, H * m.v_head_dim)
         out = shard_act(out, "act_batch", "act_seq", "heads")
         return out @ p["wo"].astype(dt), (
-            {"c_kv": c_kv, "k_rope": k_rope_raw} if cache is not None else None)
+            {"c_kv": c_kv, "k_rope": k_rope_raw}
+            if cache is not None else None)
     scores = (jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope)
               + jnp.einsum("bqhd,bsod->bhqs", q_rope, k_rope))
     scores = scores.astype(jnp.float32) / math.sqrt(
@@ -225,9 +227,11 @@ def mla_apply(cfg, p, x, *, pos_offset: int = 0, causal: bool = True,
         mask = jnp.tril(jnp.ones((s, s), bool))
         scores = jnp.where(mask[None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, -1).astype(dt)
-    out = jnp.einsum("bhqs,bshd->bqhd", probs, v).reshape(b, s, H * m.v_head_dim)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs,
+                     v).reshape(b, s, H * m.v_head_dim)
     out = shard_act(out, "act_batch", "act_seq", "heads")
-    new_cache = {"c_kv": c_kv, "k_rope": k_rope_raw} if cache is not None else None
+    new_cache = ({"c_kv": c_kv, "k_rope": k_rope_raw}
+                 if cache is not None else None)
     return out @ p["wo"].astype(dt), new_cache
 
 

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,7 +57,7 @@ def _fwd_impl(q, k, v, causal, block_q, block_k, pos_offset):
     q_pos = (jnp.arange(sq) + pos_offset)
 
     def body(carry, ik):
-        m, l, acc = carry
+        m, lsum, acc = carry
         kb = kb_all[:, ik]                        # [b, bk, KV, d]
         vb = vb_all[:, ik]
         s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb).astype(f32) * scale
@@ -70,19 +69,19 @@ def _fwd_impl(q, k, v, causal, block_q, block_k, pos_offset):
         m2 = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m2[..., None])
         corr = jnp.exp(m - m2)
-        l = corr * l + jnp.sum(p, axis=-1)
+        lsum = corr * lsum + jnp.sum(p, axis=-1)
         pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(q.dtype), vb)
         acc = corr[..., None] * acc + pv.astype(f32)
-        return (m2, l, acc), None
+        return (m2, lsum, acc), None
 
     m0 = jnp.full((b, KV, G, sq), NEG_INF, f32)
     l0 = jnp.zeros((b, KV, G, sq), f32)
     a0 = jnp.zeros((b, KV, G, sq, dv), f32)
-    (m, l, acc), _ = jax.lax.scan(
+    (m, lsum, acc), _ = jax.lax.scan(
         jax.checkpoint(body), (m0, l0, a0), jnp.arange(nk))
-    o = (acc / jnp.maximum(l, 1e-30)[..., None])
+    o = (acc / jnp.maximum(lsum, 1e-30)[..., None])
     o = jnp.moveaxis(o, -2, 1).reshape(b, sq, H, dv).astype(q.dtype)
-    lse = (m + jnp.log(jnp.maximum(l, 1e-30)))    # [b, KV, G, sq]
+    lse = (m + jnp.log(jnp.maximum(lsum, 1e-30)))  # [b, KV, G, sq]
     return o, lse
 
 

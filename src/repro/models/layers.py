@@ -9,7 +9,7 @@ declares its parameters as ``ParamSpec``s so that:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -62,7 +62,8 @@ def init_params(specs, key, default_dtype: str = "float32"):
 
 def specs_to_sds(specs, default_dtype: str = "float32"):
     return jax.tree.map(
-        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or default_dtype)),
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.dtype(s.dtype or default_dtype)),
         specs, is_leaf=is_spec)
 
 
@@ -172,7 +173,8 @@ def norm_apply(cfg, p, x, kind: Optional[str] = None, eps: float = 1e-5):
 def groupnorm_heads(x, scale, bias, n_heads: int, eps: float = 1e-5):
     """GroupNorm over head_dim groups (RWKV output norm). x: [..., d]."""
     orig = x.shape
-    xf = x.astype(jnp.float32).reshape(orig[:-1] + (n_heads, orig[-1] // n_heads))
+    xf = x.astype(jnp.float32).reshape(
+        orig[:-1] + (n_heads, orig[-1] // n_heads))
     mu = jnp.mean(xf, axis=-1, keepdims=True)
     var = jnp.var(xf, axis=-1, keepdims=True)
     y = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(orig)
@@ -223,7 +225,8 @@ def embed_specs(cfg):
 
 
 def embed_apply(cfg, p, tokens):
-    emb = jnp.take(p["tok"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    emb = jnp.take(p["tok"], tokens,
+                   axis=0).astype(jnp.dtype(cfg.compute_dtype))
     emb = emb * math.sqrt(cfg.d_model)
     return shard_act(emb, "act_batch", "act_seq", None)
 

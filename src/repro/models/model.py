@@ -3,7 +3,6 @@ pipeline runtimes, KV-cache/state decode, and dry-run input specs.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -13,7 +12,7 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import attention as attn_mod
 from repro.models import ssm as ssm_mod
 from repro.models.layers import (embed_apply, embed_specs, norm_apply,
-                                 norm_specs, shard_act, sinusoidal_pos,
+                                 norm_specs, sinusoidal_pos,
                                  softmax_xent, specs_to_axes, specs_to_sds,
                                  init_params, stack_specs, unembed_apply)
 from repro.models.transformer import (block_apply, block_specs,
@@ -181,7 +180,8 @@ class Model:
         outer = self._outer_specs()
         if cfg.is_encdec:
             stages = {
-                "enc": stack_specs(block_specs(cfg), cfg.n_enc_layers, "layer"),
+                "enc": stack_specs(block_specs(cfg), cfg.n_enc_layers,
+                                   "layer"),
                 "dec": stack_specs(block_specs(cfg, cross=True),
                                    cfg.n_layers, "layer"),
             }
@@ -273,7 +273,7 @@ class Model:
             lo = hi
         return carry
 
-    # --------------------------------------------------------------- embed/head
+    # ------------------------------------------------------- embed/head
     def embed(self, outer, batch):
         cfg = self.cfg
         if cfg.is_encdec:
@@ -297,7 +297,7 @@ class Model:
         x = norm_apply(cfg, outer["ln_f"], x)
         return unembed_apply(cfg, outer["embed"], x)
 
-    # ------------------------------------------------------------- reference fwd
+    # -------------------------------------------------- reference fwd
     def hidden(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Final hidden states (pre-head).  Returns (x, aux_loss)."""
         cfg = self.cfg
@@ -386,7 +386,8 @@ class Model:
 
     def loss(self, params, batch):
         logits, aux = self.forward(params, batch)
-        return softmax_xent(logits, batch["targets"], self.cfg.vocab_size) + aux
+        return softmax_xent(logits, batch["targets"],
+                            self.cfg.vocab_size) + aux
 
     # ------------------------------------------------------------------ decode
     def flat_layers(self, stages):
@@ -560,7 +561,7 @@ class Model:
             lambda a: jnp.broadcast_to(a, (L,) + a.shape), one)}
 
     def decode_step(self, params, cache, token, pos):
-        """token: [b,1] int32; pos: scalar int32.  -> (logits [b,1,V'], cache)."""
+        """token [b,1] int32, pos scalar -> (logits [b,1,V'], cache)."""
         cfg = self.cfg
         outer, stages = params["outer"], params["stages"]
         x = embed_apply(cfg, outer["embed"], token)

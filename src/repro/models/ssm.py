@@ -12,8 +12,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import (ParamSpec, groupnorm_heads, norm_apply,
-                                 shard_act)
+from repro.models.layers import (ParamSpec, groupnorm_heads, shard_act)
 
 State = Dict[str, Any]
 
@@ -192,7 +191,8 @@ def rwkv6_tm_apply(cfg, p, x, state: Optional[State] = None,
     xp = _token_shift(x, prev)
     sx = xp - x
     xxx = x + sx * p["mu_x"].astype(dt)
-    zmix = jnp.tanh(xxx @ p["mix_A"].astype(dt)).reshape(b, s, 5, _RWKV_LORA_MIX)
+    zmix = jnp.tanh(xxx @ p["mix_A"].astype(dt)).reshape(
+        b, s, 5, _RWKV_LORA_MIX)
     mix = jnp.einsum("bsfk,fkd->bsfd", zmix, p["mix_B"].astype(dt))
     comp = x[:, :, None, :] + sx[:, :, None, :] * (
         p["mus"].astype(dt)[None, None] + mix)
@@ -366,7 +366,8 @@ def mamba2_apply(cfg, p, x, state: Optional[State] = None,
         else:
             fn = mamba2_ssd_ref
     y, S_T = fn(xh, delta, decay, B, C, S0)
-    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = (y + p["D"].astype(jnp.float32)[None, None, :, None]
+         * xh.astype(jnp.float32))
     y = y.reshape(b, sl, d_in).astype(dt_)
 
     # gated RMSNorm

@@ -5,9 +5,8 @@ residual).  Blocks expose cache/state hooks for decode.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn

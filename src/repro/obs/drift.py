@@ -106,7 +106,7 @@ def format_drift(rep: Dict[str, Any]) -> str:
         f"ir-predicted {b['predicted_ir']:.3f}  "
         f"cost-weighted {b['predicted_weighted']:.3f}  "
         f"drift {b['drift']:+.3f}",
-        f"# device busy fractions: "
+        "# device busy fractions: "
         + " ".join(f"d{i}={f:.2f}" for i, f in enumerate(dv['busy_frac']))
         + f"  (p2p modelled {dv['p2p_s_modelled']:.2e}s/cut)",
         "# stage  pred_s      meas_s      pred_share meas_share rel_err",

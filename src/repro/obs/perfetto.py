@@ -14,7 +14,7 @@ file from the command line.
 from __future__ import annotations
 
 import json
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List
 
 PID_MEASURED, PID_PREDICTED = 0, 1
 _LANE_NAMES = {PID_MEASURED: "measured", PID_PREDICTED: "predicted"}

@@ -36,14 +36,16 @@ def update(params, state: AdamState, grads, *, lr, b1=0.9, b2=0.999,
         m2 = b1 * m + (1 - b1) * gf
         v2 = b2 * v + (1 - b2) * jnp.square(gf)
         step = lr * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
-        p2 = p.astype(jnp.float32) - step - lr * weight_decay * p.astype(jnp.float32)
+        p2 = (p.astype(jnp.float32) - step
+              - lr * weight_decay * p.astype(jnp.float32))
         return p2.astype(p.dtype), m2, v2
 
     flat_p, treedef = jax.tree.flatten(params)
     flat_m = treedef.flatten_up_to(state.m)
     flat_v = treedef.flatten_up_to(state.v)
     flat_g = treedef.flatten_up_to(grads)
-    out = [upd(p, m, v, g) for p, m, v, g in zip(flat_p, flat_m, flat_v, flat_g)]
+    out = [upd(p, m, v, g)
+           for p, m, v, g in zip(flat_p, flat_m, flat_v, flat_g)]
     return (treedef.unflatten([o[0] for o in out]),
             AdamState(treedef.unflatten([o[1] for o in out]),
                       treedef.unflatten([o[2] for o in out]), c))

@@ -29,6 +29,14 @@ This subsystem makes both explicit and checkable:
                     fraction / activation-stash / weight-stash-depth
                     axes every family trades on are derived from the
                     same timeline.
+  ``verify``        static analyzer over the compiled artifacts — slot
+                    dataflow/WAR/WAW safety, ppermute ring matching,
+                    closed-form staleness, first-contribution
+                    uniqueness, completeness, and exact resource
+                    bounds; run by default at runtime construction
+                    (``PipelinePlan.verify()``), as a CLI
+                    (``python -m repro.planner.verify``), and proven
+                    to have power by a mutation harness.
   ``api``           ``plan(config, n_stages) -> PipelinePlan``, consumed
                     by ``core/simulator.py`` (arbitrary-schedule
                     staleness), ``core/pipeline_stream.py`` (prediction
@@ -56,6 +64,10 @@ from repro.planner.schedule_ir import (DeviceStreams, Event, EventTable,
                                        pipedream_2bw, round_compute_events,
                                        round_compute_program,
                                        round_robin_1f1b, streaming)
+from repro.planner.verify import (VerificationError, VerifyReport,
+                                  Violation, check_plan,
+                                  verify_device_streams,
+                                  verify_event_table, verify_plan)
 
 __all__ = [
     "PipelinePlan", "SCHEDULES", "ROUND_SCHEDULES", "plan",
@@ -66,4 +78,6 @@ __all__ = [
     "one_f_one_b", "pipedream_2bw", "interleaved_1f1b",
     "EventTable", "compile_event_table", "round_compute_program",
     "DeviceStreams", "compile_device_streams", "round_compute_events",
+    "VerificationError", "VerifyReport", "Violation", "check_plan",
+    "verify_event_table", "verify_device_streams", "verify_plan",
 ]

@@ -144,6 +144,16 @@ class PipelinePlan:
             ir.round_compute_events(self.round_ir(), base=base),
             self.n_chunks, self.round_microbatches, self.n_devices)
 
+    def verify(self, *, device_streams: bool = True) -> None:
+        """Statically verify this plan's compiled artifacts (slot
+        dataflow, ring comm matching, staleness closed forms,
+        completeness, resource bounds — see ``planner/verify.py``).
+        Round schedules verify the event table and, by default, the
+        device streams; non-round schedules re-validate the timeline.
+        Raises :class:`~repro.planner.verify.VerificationError`."""
+        from repro.planner import verify as pv
+        pv.check_plan(self, device_streams=device_streams)
+
     def summary(self) -> str:
         v = (f" v={self.virtual_stages}" if self.virtual_stages > 1 else "")
         return (f"plan[{self.schedule} x{self.n_stages}{v} "

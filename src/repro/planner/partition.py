@@ -14,7 +14,7 @@ hardware constants of the paper's platform (4×P40 over PCIe 3.0 x16).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 # paper platform (§4.1) — mirrored from benchmarks/_timeline.py, which is
 # not importable from src/

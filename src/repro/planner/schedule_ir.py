@@ -301,12 +301,31 @@ class Schedule:
         * bwd(m, N−1) strictly after fwd(m, N−1)
         * bwd(m, k) strictly after bwd(m, k+1)
         * m's update on stage k strictly after bwd(m, k)
+        * every update references an emitted fwd and bwd for each
+          (minibatch, stage) it applies — a gradient with no backward
+          is a malformed timeline, not an incomplete one
         * a pinned read version exists when read (wv ≤ current version)
         * at most one compute event per (device, kind) per tick — the
           unit-time emitters (streaming, round-robin) model a time unit
           as one fwd slot plus one bwd slot
         """
         N = self.n_stages
+        for i, e in enumerate(self.events):
+            if e.kind != UPDATE:
+                continue
+            for k in e.stages:
+                for m in e.mbs:
+                    for kind in (FWD, BWD):
+                        j = self._index.get((kind, m, k))
+                        if j is None:
+                            raise ValueError(
+                                f"{self.name}: update at t={e.t} applies "
+                                f"minibatch {m} on stage {k} with no "
+                                f"{kind}({m},{k}) event")
+                        if kind == BWD and not j < i:
+                            raise ValueError(
+                                f"{self.name}: update of {m} before "
+                                f"bwd({m},{k})")
         for m in self.complete_minibatches():
             f = [self._index[(FWD, m, k)] for k in range(N)]
             b = [self._index[(BWD, m, k)] for k in range(N)]

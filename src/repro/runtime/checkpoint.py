@@ -37,7 +37,7 @@ import os
 import re
 import shutil
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np

@@ -28,7 +28,8 @@ _DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
 
 _SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
 _INSTR_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%([^\s=]+)\s*=\s*(\(.*?\)|[a-z][a-z0-9]*\[[0-9,]*\]\S*)\s+"
+    r"^\s*(?:ROOT\s+)?%([^\s=]+)\s*=\s*"
+    r"(\(.*?\)|[a-z][a-z0-9]*\[[0-9,]*\]\S*)\s+"
     r"([a-z][a-z0-9_-]*)\((.*)$")
 _HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([^\s(]+)\s*\(.*\)\s*->\s*.*\{\s*$")
 _CALL_ATTR_RE = re.compile(

@@ -8,7 +8,6 @@ logical mesh the runtime uses.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import numpy as np
 from jax.sharding import Mesh

@@ -43,7 +43,7 @@ def logical_rules(cfg: ArchConfig, mesh: Mesh, *,
         # --- activations ----------------------------------------------------
         "act_batch": batch,
         "act_seq": "pipe" if plan.pipe_role == "context" else None,
-        # --- decode caches ----------------------------------------------------
+        # --- decode caches ------------------------------------------
         "act_kvseq": None,
         "head_dim": None,
         "state": None,
@@ -104,7 +104,8 @@ def shardings_for(axes_tree: Any, sds_tree: Any, mesh: Mesh,
     sizes = axis_sizes(mesh)
 
     def leaf(axes, sds):
-        return NamedSharding(mesh, spec_for_leaf(axes, sds.shape, rules, sizes))
+        return NamedSharding(
+            mesh, spec_for_leaf(axes, sds.shape, rules, sizes))
 
     return jax.tree.map(leaf, axes_tree, sds_tree,
                         is_leaf=lambda x: isinstance(x, tuple) and all(
@@ -304,7 +305,8 @@ def _state_shardings(model, state_sds: Dict[str, Any], mesh: Mesh,
         }
     if "batch_ring" in state_sds:
         out["batch_ring"] = jax.tree.map(
-            lambda s: by_axes((None, "act_batch") + (None,) * (len(s.shape) - 2),
+            lambda s: by_axes(
+                (None, "act_batch") + (None,) * (len(s.shape) - 2),
                               s, act_rules),
             state_sds["batch_ring"])
     if "w_stash" in state_sds:

@@ -4,7 +4,6 @@ import sys
 # src layout import without install
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import dataclasses  # noqa: E402
 
 import jax  # noqa: E402
 import numpy as np  # noqa: E402

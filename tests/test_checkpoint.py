@@ -46,7 +46,8 @@ class TestRoundtrip:
         ckpt.save(d, state, 1)
         # simulate a crashed write
         os.makedirs(os.path.join(d, "step_00000002.tmp"), exist_ok=True)
-        os.makedirs(os.path.join(d, "step_00000003"), exist_ok=True)  # no manifest
+        # no manifest
+        os.makedirs(os.path.join(d, "step_00000003"), exist_ok=True)
         assert ckpt.latest_step(d) == 1
 
     def test_background_save(self, setup):

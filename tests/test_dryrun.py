@@ -18,8 +18,8 @@ def run_cell(arch, shape, extra=()):
          "--shape", shape, "--smoke", *extra],
         capture_output=True, text=True, env=env, timeout=900)
     assert out.returncode == 0, out.stdout + out.stderr
-    recs = [json.loads(l) for l in out.stdout.splitlines()
-            if l.startswith("{")]
+    recs = [json.loads(ln) for ln in out.stdout.splitlines()
+            if ln.startswith("{")]
     assert recs, out.stdout
     return recs[0]
 

@@ -148,6 +148,61 @@ class TestTimelineMetrics:
         with pytest.raises(ValueError, match="double-booked"):
             bad.validate()
 
+    def test_update_with_missing_bwd_detected(self):
+        """An applied gradient with no backward is malformed, not
+        merely incomplete — validate() must raise, not skip the
+        minibatch."""
+        bad = ir.Schedule("bad", 1, [
+            ir.Event(ir.FWD, 0, stage=0, mb=0),
+            ir.Event(ir.UPDATE, 1, stages=(0,), mbs=(0,))])
+        with pytest.raises(ValueError, match=r"no bwd\(0,0\)"):
+            bad.validate()
+
+    def test_update_with_missing_fwd_detected(self):
+        bad = ir.Schedule("bad", 1, [
+            ir.Event(ir.BWD, 0, stage=0, mb=0),
+            ir.Event(ir.UPDATE, 1, stages=(0,), mbs=(0,))])
+        with pytest.raises(ValueError, match=r"no fwd\(0,0\)"):
+            bad.validate()
+
+    def test_out_of_order_fwd_chain_detected(self):
+        bad = ir.Schedule("bad", 2, [
+            ir.Event(ir.FWD, 0, stage=1, mb=0),
+            ir.Event(ir.FWD, 1, stage=0, mb=0),
+            ir.Event(ir.BWD, 2, stage=1, mb=0),
+            ir.Event(ir.BWD, 3, stage=0, mb=0),
+            ir.Event(ir.UPDATE, 4, stages=(0, 1), mbs=(0,))])
+        with pytest.raises(ValueError,
+                           match=r"fwd\(0,1\) before fwd\(0,0\)"):
+            bad.validate()
+
+    def test_out_of_order_bwd_chain_detected(self):
+        bad = ir.Schedule("bad", 2, [
+            ir.Event(ir.FWD, 0, stage=0, mb=0),
+            ir.Event(ir.FWD, 1, stage=1, mb=0),
+            ir.Event(ir.BWD, 2, stage=0, mb=0),
+            ir.Event(ir.BWD, 3, stage=1, mb=0),
+            ir.Event(ir.UPDATE, 4, stages=(0, 1), mbs=(0,))])
+        with pytest.raises(ValueError,
+                           match=r"bwd\(0,0\) before bwd\(0,1\)"):
+            bad.validate()
+
+    def test_bwd_before_fwd_detected(self):
+        bad = ir.Schedule("bad", 1, [
+            ir.Event(ir.BWD, 0, stage=0, mb=0),
+            ir.Event(ir.FWD, 1, stage=0, mb=0),
+            ir.Event(ir.UPDATE, 2, stages=(0,), mbs=(0,))])
+        with pytest.raises(ValueError, match="before fwd"):
+            bad.validate()
+
+    def test_update_before_bwd_detected(self):
+        bad = ir.Schedule("bad", 1, [
+            ir.Event(ir.FWD, 0, stage=0, mb=0),
+            ir.Event(ir.UPDATE, 1, stages=(0,), mbs=(0,)),
+            ir.Event(ir.BWD, 2, stage=0, mb=0)])
+        with pytest.raises(ValueError, match="update of 0 before"):
+            bad.validate()
+
 
 # ===========================================================================
 # virtual-stage parameter chunking
@@ -376,6 +431,7 @@ class TestIRPlanValidation:
 class TestTrainCLI:
     @pytest.mark.parametrize("argv", [
         ["--schedule", "1f1b"],
+        ["--schedule", "1f1b", "--no-verify"],
         ["--schedule", "interleaved", "--virtual-stages", "2"],
         ["--schedule", "2bw"],
     ])

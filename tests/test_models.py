@@ -1,6 +1,5 @@
 """Per-arch smoke tests (reduced configs), param-count faithfulness,
 decode-vs-forward consistency."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ closed-form ``bubble_frac``.
 import json
 
 import jax
-import numpy as np
 import pytest
 
 from conftest import tiny_cfg
@@ -261,7 +260,7 @@ class TestMetricsRegistry:
             {"event": "heartbeat_missed", "t": 1.0, "worker": 3}
         reg.close()
         reg.close()     # idempotent
-        recs = [json.loads(l) for l in open(path)]
+        recs = [json.loads(ln) for ln in open(path)]
         assert recs[-1]["event"] == "summary"
 
     def test_log_step_single_code_path(self):

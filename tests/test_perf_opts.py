@@ -1,6 +1,5 @@
 """Beyond-paper performance options preserve semantics."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

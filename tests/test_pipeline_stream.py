@@ -1,12 +1,11 @@
 """Async streaming pipeline (the paper's runtime): warm-up, modes,
 staleness behaviour, tick-scan microbatching."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from conftest import lm_batch, tiny_cfg
-from repro.core import pipeline_stream, pipeline_sync
+from repro.core import pipeline_stream
 from repro.models import Model
 from repro.optim import sgd
 
@@ -157,3 +156,55 @@ class TestHybridAndMoE:
                 losses.append(float(met["loss"]))
         assert np.isfinite(losses).all()
         assert losses[-1] < losses[0] + 0.1
+
+
+class TestUnsupportedGateMessages:
+    """Every NotImplementedError gate follows one structured shape:
+    the unsupported combination, the reason, and a supported
+    alternative — so a user hitting a gate knows what to run instead
+    without reading the source."""
+
+    _SHAPE = (r"unsupported combination: .+ — .+; "
+              r"supported alternative: .+")
+
+    def _gate(self, which):
+        import dataclasses
+        from repro.planner import plan, synthetic_profile
+        p = plan(profile=synthetic_profile([1.0] * 4), n_stages=2,
+                 schedule="1f1b", partitioner="uniform")
+        if which == "stash-depth":
+            m = Model(tiny_cfg("granite-8b", n_layers=4, pipe=2))
+            bad = dataclasses.replace(p, w_stash_depth=(3, 3))
+            return lambda: pipeline_stream.make_ir_state(
+                m, m.init(jax.random.PRNGKey(0)), None, plan=bad)
+        if which == "mpmd-clip":
+            m = Model(tiny_cfg("granite-8b", n_layers=4, pipe=2))
+            return lambda: pipeline_stream.make_ir_train_step(
+                m, plan=p, mode="spectrain", lr=0.05, exec="mpmd",
+                clip=1.0)
+        if which == "mpmd-hybrid-step":
+            m = Model(tiny_cfg("zamba2-1.2b", n_layers=4, pipe=2))
+            assert m.hybrid
+            return lambda: pipeline_stream.make_ir_train_step(
+                m, plan=p, mode="spectrain", lr=0.05, exec="mpmd")
+        assert which == "mpmd-hybrid-state"
+        m = Model(tiny_cfg("zamba2-1.2b", n_layers=4, pipe=2))
+        assert m.hybrid
+        return lambda: pipeline_stream.make_ir_state(
+            m, m.init(jax.random.PRNGKey(0)), None, plan=p,
+            exec="mpmd")
+
+    @pytest.mark.parametrize("which,names", [
+        ("stash-depth", ["weight-stash depth 3", "1f1b, gpipe"]),
+        ("mpmd-clip", ["clip_by_global_norm", "exec='spmd'"]),
+        ("mpmd-hybrid-step", ["hybrid SSM/attention", "exec='spmd'"]),
+        ("mpmd-hybrid-state", ["hybrid SSM/attention", "exec='spmd'"]),
+    ])
+    def test_gate_message_is_structured(self, which, names):
+        with pytest.raises(NotImplementedError) as e:
+            self._gate(which)()
+        msg = str(e.value)
+        import re
+        assert re.search(self._SHAPE, msg), msg
+        for name in names:
+            assert name in msg, (name, msg)

@@ -1,6 +1,5 @@
 """Sync circular pipeline == sequential execution, exactly."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

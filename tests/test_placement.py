@@ -15,7 +15,6 @@ import numpy as np
 import pytest
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from conftest import lm_batch, tiny_cfg

@@ -8,7 +8,8 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import spectrain  # noqa: E402
-from repro.models.layers import apply_rope, rope_freqs, softmax_xent  # noqa: E402
+from repro.models.layers import (apply_rope, rope_freqs,  # noqa: E402
+                                 softmax_xent)
 from repro.optim import sgd  # noqa: E402
 
 

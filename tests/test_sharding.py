@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from conftest import lm_batch, tiny_cfg
+from conftest import tiny_cfg
 from repro.configs import get_config, list_archs
 from repro.models import Model
 from repro.runtime.sharding import spec_for_leaf

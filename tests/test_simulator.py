@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.simulator import Simulator, make_mlp_staged
 from repro.optim import sgd

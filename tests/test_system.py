@@ -72,8 +72,8 @@ class TestDrivers:
             "--pipe", "2", "--steps", "30", "--batch", "8", "--seq", "16",
             "--lr", "2e-2", "--json", "--log-every", "10",
             "--ckpt-dir", str(tmp_path)])
-        recs = [json.loads(l) for l in out.splitlines()
-                if l.startswith("{")]
+        recs = [json.loads(ln) for ln in out.splitlines()
+                if ln.startswith("{")]
         assert recs[-1]["loss"] < recs[0]["loss"]
 
     def test_train_driver_resume(self, tmp_path):

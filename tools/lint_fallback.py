@@ -1,0 +1,267 @@
+#!/usr/bin/env python
+"""Dependency-free mirror of the repo's ruff configuration.
+
+The authoritative linter is ruff (``pyproject.toml [tool.ruff]``,
+installed by the CI lint job via ``pip install -e .[lint]``); this tool
+re-implements the *stable* pycodestyle/pyflakes rules that config
+selects using only the standard library, so air-gapped containers (no
+pip) can keep the tree lint-clean before pushing:
+
+    python tools/lint_fallback.py             # lint src tests benchmarks tools
+    python tools/lint_fallback.py path.py …   # explicit files
+
+Implemented rules (ruff codes):
+
+  E401  multiple imports on one line          E711  ``== None``
+  E402  module import not at top of file      E712  ``== True/False``
+  E501  line too long (79, from pyproject)    E722  bare ``except:``
+  E741  ambiguous variable name ``l O I``     F401  unused import
+  W191  tab indentation                       F541  f-string w/o fields
+  W291/W293  trailing whitespace              F632  ``is`` with literal
+  W292  missing newline at end of file        F811  redefined name
+
+``# noqa`` comments are honored, bare or with codes, like ruff's.
+E731 is ignored to match the config.  The subtler pyflakes analyses
+(F821 undefined names, F841 unused locals) are left to ruff — this
+mirror never flags what ruff would not.
+
+Exit code 0 = clean, 1 = at least one violation (listed on stdout).
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+import tokenize
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+MAX_LEN = 79
+DEFAULT_DIRS = ("src", "tests", "benchmarks", "tools")
+NOQA_RE = re.compile(r"#\s*noqa(?::\s*(?P<codes>[A-Z0-9, ]+))?",
+                     re.IGNORECASE)
+AMBIGUOUS = {"l", "O", "I"}
+
+
+class FileLint:
+    def __init__(self, path: Path, text: str):
+        self.path = path
+        self.lines = text.splitlines()
+        self.noqa: dict = {}
+        for i, line in enumerate(self.lines, 1):
+            m = NOQA_RE.search(line)
+            if m:
+                codes = m.group("codes")
+                self.noqa[i] = (set(c.strip() for c in codes.split(","))
+                                if codes else None)   # None = bare noqa
+        self.problems: list = []
+
+    def add(self, line: int, code: str, msg: str) -> None:
+        if line in self.noqa:
+            codes = self.noqa[line]
+            if codes is None or code in codes:
+                return
+        self.problems.append((line, code, msg))
+
+
+def _iter_names(target):
+    """Yield Name nodes bound by an assignment/loop target."""
+    for node in ast.walk(target):
+        if isinstance(node, ast.Name):
+            yield node
+
+
+def check_lines(fl: FileLint) -> None:
+    for i, line in enumerate(fl.lines, 1):
+        if len(line) > MAX_LEN:
+            fl.add(i, "E501",
+                   f"line too long ({len(line)} > {MAX_LEN})")
+        if line != line.rstrip():
+            fl.add(i, "W291" if line.strip() else "W293",
+                   "trailing whitespace")
+        if line[:1] == "\t" or line.lstrip(" ")[:1] == "\t":
+            fl.add(i, "W191", "indentation contains tabs")
+
+
+def check_tokens(fl: FileLint, text: str) -> None:
+    comparisons = {"None": "E711", "True": "E712", "False": "E712"}
+    try:
+        toks = list(tokenize.generate_tokens(iter(text.splitlines(
+            keepends=True)).__next__))
+    except tokenize.TokenError:
+        return
+    for a, b in zip(toks, toks[1:]):
+        if a.type == tokenize.OP and a.string in ("==", "!=") and \
+                b.type == tokenize.NAME and b.string in comparisons:
+            code = comparisons[b.string]
+            fl.add(a.start[0], code,
+                   f"comparison to {b.string} (use "
+                   f"{'is' if code == 'E711' else 'truthiness/is'})")
+
+
+def _module_prefix_ok(node) -> bool:
+    """Statements E402 permits above imports."""
+    if isinstance(node, ast.Expr) and isinstance(node.value,
+                                                 ast.Constant):
+        return True   # docstring
+    if isinstance(node, ast.ImportFrom) and node.module == "__future__":
+        return True
+    if isinstance(node, (ast.Assign, ast.AnnAssign)):
+        targets = node.targets if isinstance(node, ast.Assign) else \
+            [node.target]
+        return all(isinstance(t, ast.Name) and t.id.startswith("__")
+                   and t.id.endswith("__") for t in targets)
+    return False
+
+
+def check_ast(fl: FileLint, tree: ast.Module, is_init: bool) -> None:
+    # ---- E402 + module import inventory for F401/F811 ----------------
+    code_seen = False
+    imports: list = []          # (alias name, line, is_star)
+    for node in tree.body:
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            future = (isinstance(node, ast.ImportFrom)
+                      and node.module == "__future__")
+            if code_seen and not future:
+                fl.add(node.lineno, "E402",
+                       "module level import not at top of file")
+            if isinstance(node, ast.Import) and len(node.names) > 1:
+                fl.add(node.lineno, "E401",
+                       "multiple imports on one line")
+            if future:
+                continue
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                bound = alias.asname or alias.name.split(".")[0]
+                imports.append((bound, node.lineno))
+        elif not _module_prefix_ok(node):
+            code_seen = True
+
+    # ---- F401: unused imports (skip when __all__ re-exports) ---------
+    used = set()
+    explicit_all = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            pass
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "__all__" and \
+                        isinstance(node.value, (ast.List, ast.Tuple)):
+                    for elt in node.value.elts:
+                        if isinstance(elt, ast.Constant):
+                            explicit_all.add(elt.value)
+    for name, line in imports:
+        if name in used or name in explicit_all:
+            continue
+        if is_init and not explicit_all:
+            continue   # __init__ re-export convention without __all__
+        fl.add(line, "F401", f"{name!r} imported but unused")
+
+    # ---- F811: same top-level name imported/defined twice ------------
+    defined: dict = {}
+    for node in tree.body:
+        names = []
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            names = [(a.asname or a.name.split(".")[0], node.lineno)
+                     for a in node.names if a.name != "*"]
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            names = [(node.name, node.lineno)]
+        for name, line in names:
+            if name in defined and name not in used:
+                fl.add(line, "F811",
+                       f"redefinition of unused {name!r} from line "
+                       f"{defined[name]}")
+            defined[name] = line
+
+    # format specs ({x:<40}) are themselves JoinedStr nodes — never
+    # F541 candidates
+    specs = {id(n.format_spec) for n in ast.walk(tree)
+             if isinstance(n, ast.FormattedValue) and n.format_spec}
+    for node in ast.walk(tree):
+        # ---- E722 ----------------------------------------------------
+        if isinstance(node, ast.ExceptHandler) and node.type is None:
+            fl.add(node.lineno, "E722", "bare except")
+        # ---- E741 ----------------------------------------------------
+        if isinstance(node, (ast.Assign, ast.For)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                for n in _iter_names(t):
+                    if n.id in AMBIGUOUS:
+                        fl.add(n.lineno, "E741",
+                               f"ambiguous variable name {n.id!r}")
+        if isinstance(node, ast.comprehension):
+            for n in _iter_names(node.target):
+                if n.id in AMBIGUOUS:
+                    fl.add(n.lineno, "E741",
+                           f"ambiguous variable name {n.id!r}")
+        if isinstance(node, ast.ExceptHandler) and node.name in AMBIGUOUS:
+            fl.add(node.lineno, "E741",
+                   f"ambiguous variable name {node.name!r}")
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            args = node.args
+            for a in (args.posonlyargs + args.args + args.kwonlyargs
+                      + ([args.vararg] if args.vararg else [])
+                      + ([args.kwarg] if args.kwarg else [])):
+                if a.arg in AMBIGUOUS:
+                    fl.add(a.lineno, "E741",
+                           f"ambiguous argument name {a.arg!r}")
+        # ---- F541 ----------------------------------------------------
+        if isinstance(node, ast.JoinedStr) and id(node) not in specs \
+                and not any(isinstance(v, ast.FormattedValue)
+                            for v in node.values):
+            fl.add(node.lineno, "F541",
+                   "f-string without any placeholders")
+        # ---- F632 ----------------------------------------------------
+        if isinstance(node, ast.Compare) and any(
+                isinstance(op, (ast.Is, ast.IsNot))
+                for op in node.ops):
+            operands = [node.left] + node.comparators
+            if any(isinstance(o, ast.Constant) and
+                   not isinstance(o.value, (bool, type(None)))
+                   for o in operands):
+                fl.add(node.lineno, "F632",
+                       "use == to compare with str/int/tuple literals")
+
+
+def lint_file(path: Path) -> list:
+    text = path.read_text(encoding="utf-8")
+    fl = FileLint(path, text)
+    if text and not text.endswith("\n"):
+        fl.add(len(fl.lines), "W292", "no newline at end of file")
+    check_lines(fl)
+    check_tokens(fl, text)
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        fl.add(e.lineno or 0, "E999", f"syntax error: {e.msg}")
+        return fl.problems
+    check_ast(fl, tree, is_init=path.name == "__init__.py")
+    return fl.problems
+
+
+def main(argv=None) -> int:
+    args = argv if argv is not None else sys.argv[1:]
+    if args:
+        files = [Path(a) for a in args]
+    else:
+        files = sorted(p for d in DEFAULT_DIRS
+                       for p in (REPO / d).rglob("*.py"))
+    total = 0
+    for f in files:
+        for line, code, msg in lint_file(f):
+            print(f"{f.relative_to(REPO) if f.is_absolute() else f}"
+                  f":{line}: {code} {msg}")
+            total += 1
+    print(f"checked {len(files)} file(s): "
+          f"{'OK' if not total else f'{total} violation(s)'}")
+    return 1 if total else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
