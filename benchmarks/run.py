@@ -25,8 +25,8 @@ def main() -> int:
 
     from benchmarks import (breakdown, comm_time, comm_volume, convergence,
                             ir_compile, kernel_bench, planner_bench, rmse,
-                            roofline, throughput, trace_overhead,
-                            verifier_bench)
+                            roofline, serve_bench, throughput,
+                            trace_overhead, verifier_bench)
     benches = {
         "comm_volume": comm_volume.main,      # Fig. 3
         "comm_time": comm_time.main,          # Fig. 4
@@ -40,6 +40,7 @@ def main() -> int:
         "ir_compile": ir_compile.main,        # EXPERIMENTS.md §IR backends
         "trace_overhead": trace_overhead.main,  # docs/OBSERVABILITY.md
         "verifier": verifier_bench.main,      # planner/verify.py gate
+        "serve": serve_bench.main,            # docs/SERVING.md
     }
     picked = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

@@ -1,5 +1,9 @@
-"""Batched serving example: prefill + decode with a KV cache, across
-architecture families (attention / MLA / RWKV / hybrid)."""
+"""Continuous-batching serving example across architecture families
+(attention / MLA / RWKV / hybrid).
+
+Attention and SSM archs run the pipelined engine (serving rounds
+compiled to schedule IR); the hybrid arch auto-falls back to the
+whole-model SimpleEngine (--engine auto)."""
 import os
 import subprocess
 import sys
@@ -13,5 +17,7 @@ if __name__ == "__main__":
         print(f"=== {arch} ===")
         subprocess.check_call(
             [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
-             "--batch", "2", "--prompt-len", "16", "--gen", "16"],
+             "--pipe", "2", "--layers", "4", "--requests", "6",
+             "--rate", "1.0", "--prompt-lens", "2,12",
+             "--gen-lens", "1,8"],
             env=env)

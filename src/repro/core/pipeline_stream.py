@@ -439,6 +439,33 @@ IR_BACKENDS = ("scan", "unrolled")
 EXECS = ("spmd", "mpmd")
 
 
+def _resolve_execution(execution, legacy, caller: str):
+    """One-release back-compat shim for the old builtin-shadowing
+    ``exec=`` keyword: resolve ``execution=`` (new) against a legacy
+    ``**{"exec": ...}`` catch-all, warning on the old spelling and
+    rejecting anything else that landed in the catch-all."""
+    unknown = set(legacy) - {"exec"}
+    if unknown:
+        raise TypeError(f"{caller}() got unexpected keyword arguments "
+                        f"{sorted(unknown)}")
+    if "exec" in legacy:
+        import warnings
+        warnings.warn(
+            f"{caller}(exec=...) is deprecated; pass execution= "
+            f"instead (exec= will be removed next release)",
+            DeprecationWarning, stacklevel=3)
+        if execution is not None and execution != legacy["exec"]:
+            raise TypeError(
+                f"{caller}() got both execution={execution!r} and "
+                f"legacy exec={legacy['exec']!r}")
+        execution = legacy["exec"]
+    execution = "spmd" if execution is None else execution
+    if execution not in EXECS:
+        raise ValueError(
+            f"unknown execution {execution!r}; known: {EXECS}")
+    return execution
+
+
 def _mpmd_mesh(mesh, n_devices: int):
     """Resolve/validate the mesh the MPMD path shard_maps over: a
     ``pipe`` axis of exactly ``n_devices`` (one pipeline stage per
@@ -542,8 +569,10 @@ def _round_program(plan):
 
 
 def make_ir_state(model, params, batch_sds, *, plan,
-                  mode: str = "spectrain", exec: str = "spmd",
-                  mesh=None, verify: bool = True) -> Dict[str, Any]:
+                  mode: str = "spectrain",
+                  execution: Optional[str] = None,
+                  mesh=None, verify: bool = True,
+                  **legacy) -> Dict[str, Any]:
     """Train state for the IR interpreter: chunked params + momentum
     (+ the 2BW double buffer when the IR derives a stash depth of 2).
 
@@ -556,7 +585,7 @@ def make_ir_state(model, params, batch_sds, *, plan,
     interpreter's in-flight activations live inside one traced round,
     sized by the schedule itself (peak = ``plan.act_stash``).
 
-    ``exec="mpmd"`` builds the packed stage-local layout instead: the
+    ``execution="mpmd"`` builds the packed stage-local layout instead: the
     ragged chunk trees are zero-padded and stacked into ``[v, S, Lmax,
     ...]`` leaves (``models.model.pack_chunk_params``) and device_put
     with ``P(None, 'pipe')`` on ``mesh`` (default: the first S local
@@ -566,24 +595,24 @@ def make_ir_state(model, params, batch_sds, *, plan,
     per-chunk layer counts, for unpacking/checkpoint migration).
     """
     assert mode in MODES, mode
-    if exec not in EXECS:
-        raise ValueError(f"unknown exec {exec!r}; known: {EXECS}")
+    execution = _resolve_execution(execution, legacy, "make_ir_state")
     del batch_sds  # interpreter state holds no rings; shape-agnostic
     sizes = _ir_plan_check(model, plan)
     if verify:
         plan.verify()   # static artifact verification (planner/verify.py)
     chunks = model.partition_stage_params(params["stages"], sizes,
                                           n_chunks=plan.n_chunks)
-    if exec == "mpmd":
+    if execution == "mpmd":
         from repro.models.model import pack_chunk_params
         from repro.runtime import sharding as rsh
 
         if model.hybrid:
             raise _unsupported(
-                "exec='mpmd' with a hybrid SSM/attention model",
+                "execution='mpmd' with a hybrid SSM/attention model",
                 "per-stage 'shared' blocks have no flat layer order to "
                 "pack into the [v, S, Lmax] stage-local layout",
-                "exec='spmd' (runs hybrid models with every schedule)")
+                "execution='spmd' (runs hybrid models with every "
+                "schedule)")
         mesh = _mpmd_mesh(mesh, plan.n_devices)
         packed, psizes = pack_chunk_params(chunks, plan.n_devices)
         assert psizes == tuple(sizes), (psizes, sizes)
@@ -619,8 +648,8 @@ def make_ir_state(model, params, batch_sds, *, plan,
 def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
                        gamma: float = 0.9, clip: Optional[float] = None,
                        backend: str = "scan", tracer=None,
-                       exec: str = "spmd", mesh=None,
-                       verify: bool = True) -> Callable:
+                       execution: Optional[str] = None, mesh=None,
+                       verify: bool = True, **legacy) -> Callable:
     """Schedule-driven step: one call executes one flush round (gpipe /
     1f1b / interleaved) or one 2BW accumulation group of
     ``plan.round_microbatches`` microbatches, by interpreting the IR's
@@ -661,7 +690,7 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
     event) spans.  ``tracer=None`` (the default) adds nothing to the
     trace — the step stays byte-identical to the untraced interpreter.
 
-    ``exec`` selects the execution model: ``"spmd"`` (default) runs the
+    ``execution`` selects the execution model: ``"spmd"`` (default) runs the
     round as one replicated program (stage weights visible everywhere,
     GSPMD free to shard); ``"mpmd"`` runs each device's tick stream
     inside a ``shard_map`` over ``mesh``'s ``pipe`` axis against
@@ -669,7 +698,7 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
     the stage cuts via ``ppermute`` (see :func:`_make_mpmd_step`) —
     bitwise-identical losses and state leaves, ~1/S per-device weight
     memory.  ``backend`` applies to the SPMD path only; mpmd requires
-    the matching ``make_ir_state(..., exec="mpmd")`` packed state and
+    the matching ``make_ir_state(..., execution="mpmd")`` packed state and
     refuses ``clip`` and hybrid models.
 
     ``verify=True`` (the default) statically verifies the plan's
@@ -682,23 +711,25 @@ def make_ir_train_step(model, *, plan, mode: str = "spectrain", lr: float,
     if backend not in IR_BACKENDS:
         raise ValueError(
             f"unknown IR backend {backend!r}; known: {IR_BACKENDS}")
-    if exec not in EXECS:
-        raise ValueError(f"unknown exec {exec!r}; known: {EXECS}")
+    execution = _resolve_execution(execution, legacy,
+                                   "make_ir_train_step")
     if verify and plan is not None and plan.schedule in IR_SCHEDULES:
         plan.verify()   # static artifact verification (planner/verify.py)
-    if exec == "mpmd":
+    if execution == "mpmd":
         if clip:
             raise _unsupported(
-                "exec='mpmd' with clip_by_global_norm",
+                "execution='mpmd' with clip_by_global_norm",
                 "the global norm's canonical-order reduction is not "
                 "bit-reproducible on the packed stage layout",
-                "exec='spmd' with clip, or exec='mpmd' with clip=None")
+                "execution='spmd' with clip, or execution='mpmd' with "
+                "clip=None")
         if model.hybrid:
             raise _unsupported(
-                "exec='mpmd' with a hybrid SSM/attention model",
+                "execution='mpmd' with a hybrid SSM/attention model",
                 "per-stage 'shared' blocks have no flat layer order to "
                 "pack into the [v, S, Lmax] stage-local layout",
-                "exec='spmd' (runs hybrid models with every schedule)")
+                "execution='spmd' (runs hybrid models with every "
+                "schedule)")
         return _make_mpmd_step(model, plan=plan, mode=mode, lr=lr,
                                gamma=gamma, tracer=tracer, mesh=mesh)
     sizes = _ir_plan_check(model, plan)

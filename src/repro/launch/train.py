@@ -16,10 +16,15 @@ round / 2BW group per step); ``--virtual-stages v`` gives each device v
 chunk-stages under ``--schedule interleaved``; ``--ir-backend
 {scan,unrolled}`` picks the interpreter's round body (the default scan
 backend keeps trace size O(1) in the round's microbatch count);
-``--exec {spmd,mpmd}`` picks the execution backend (``mpmd`` keeps
-each stage's weights resident only on its pipe device — bitwise the
-same training, 1/S the per-device weight memory).  See
-docs/SCHEDULES.md.
+``--execution {spmd,mpmd}`` picks the execution backend (``mpmd``
+keeps each stage's weights resident only on its pipe device — bitwise
+the same training, 1/S the per-device weight memory; ``--exec`` is the
+deprecated alias).  See docs/SCHEDULES.md.
+
+The execution knobs flow through one ``repro.api.RuntimeConfig``
+(built by ``repro.api.runtime_config_from_args``, the wiring shared
+with ``launch/serve.py``) and the steps through the ``repro.api.
+Runtime`` facade.
 
 ``--layers`` need not divide ``--pipe``: stage params are ragged
 per-stage trees (e.g. ``--layers 7 --pipe 3`` runs sizes (3,2,2) under
@@ -37,6 +42,8 @@ import time
 import jax
 import numpy as np
 
+from repro.api import (Runtime, add_runtime_args,
+                       runtime_config_from_args)
 from repro.configs import get_config, smoke_config
 from repro.core import pipeline_stream, pipeline_sync
 from repro.data import DataConfig, SyntheticLM
@@ -83,40 +90,11 @@ def main(argv=None) -> int:
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--lr", type=float, default=1e-2)
-    ap.add_argument("--gamma", type=float, default=0.9)
-    ap.add_argument("--clip", type=float, default=0.0)
-    ap.add_argument("--mode", default="spectrain",
-                    choices=("sync",) + pipeline_stream.MODES)
-    ap.add_argument("--schedule", default="stream",
-                    choices=("stream",) + pipeline_stream.IR_SCHEDULES,
-                    help="pipeline schedule: the streaming tick runtime "
-                         "(default) or an IR-interpreted round schedule "
-                         "(gpipe / 1f1b / 2bw / interleaved)")
+    add_runtime_args(ap)
     ap.add_argument("--virtual-stages", type=int, default=1,
                     dest="virtual_stages",
                     help="chunks per device for --schedule interleaved "
                          "(v >= 2 shrinks the flush bubble ~v x)")
-    ap.add_argument("--ir-backend", default="scan", dest="ir_backend",
-                    choices=pipeline_stream.IR_BACKENDS,
-                    help="round-body construction for IR schedules: "
-                         "'scan' compiles a lax.scan over the plan's "
-                         "event table (O(1) trace size in the round's "
-                         "microbatch count), 'unrolled' inlines every "
-                         "event (the reference oracle)")
-    ap.add_argument("--exec", default="spmd", dest="exec",
-                    choices=pipeline_stream.EXECS,
-                    help="execution backend for IR schedules: 'spmd' "
-                         "replicates every stage's weights on every "
-                         "device, 'mpmd' keeps stage weights device-"
-                         "local (shard_map over the pipe axis, "
-                         "activations cross stage cuts via ppermute); "
-                         "bitwise-identical results, 1/S the per-device "
-                         "weight memory (needs >= --pipe devices)")
-    ap.add_argument("--no-verify", action="store_true", dest="no_verify",
-                    help="skip the static schedule verifier "
-                         "(planner/verify.py) that IR-schedule runs "
-                         "execute by default at step construction")
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
@@ -140,6 +118,11 @@ def main(argv=None) -> int:
                     help="append structured JSONL telemetry (step records, "
                          "heartbeat/restate events, summary) to this path")
     args = ap.parse_args(argv)
+    try:
+        rc = runtime_config_from_args(args,
+                                      ticks_per_step=max(args.ticks, 1))
+    except ValueError as e:
+        raise SystemExit(str(e))
 
     cfg = build(args)
     model = Model(cfg)
@@ -169,18 +152,11 @@ def main(argv=None) -> int:
         raise SystemExit(
             f"--virtual-stages {args.virtual_stages} requires "
             f"--schedule interleaved, got --schedule {args.schedule}")
-    if args.exec == "mpmd":
-        if args.mode == "sync" or \
-                args.schedule not in pipeline_stream.IR_SCHEDULES:
-            raise SystemExit(
-                f"--exec mpmd runs IR round schedules "
-                f"({'/'.join(pipeline_stream.IR_SCHEDULES)}); got "
-                f"--schedule {args.schedule} --mode {args.mode}")
-        if args.clip:
-            raise SystemExit(
-                "--exec mpmd does not support --clip: the global "
-                "norm's canonical-order reduction is not "
-                "bit-reproducible on the packed stage layout")
+    if rc.execution == "mpmd" and args.mode == "sync":
+        raise SystemExit(
+            f"--execution mpmd runs IR round schedules "
+            f"({'/'.join(pipeline_stream.IR_SCHEDULES)}); got "
+            f"--mode sync")
     schedule = "gpipe" if args.mode == "sync" else args.schedule
     plan_kw = {}
     if schedule in pipeline_stream.IR_SCHEDULES and args.mode != "sync":
@@ -243,40 +219,27 @@ def main(argv=None) -> int:
             model, lr=args.lr, gamma=args.gamma,
             num_microbatches=cfg.mesh_plan.num_microbatches,
             clip=args.clip or None)
-    elif schedule in pipeline_stream.IR_SCHEDULES:
-        state = pipeline_stream.make_ir_state(
-            model, model.init(key), batch_sds, plan=pplan,
-            mode=args.mode, exec=args.exec, verify=not args.no_verify)
-        step_fn = pipeline_stream.make_ir_train_step(
-            model, plan=pplan, mode=args.mode, lr=args.lr,
-            gamma=args.gamma, clip=args.clip or None,
-            backend=args.ir_backend, exec=args.exec, tracer=tracer,
-            verify=not args.no_verify)
-        if tracer is not None and args.exec == "mpmd":
+        step_fn = jax.jit(step_fn, donate_argnums=0)
+        if tracer is not None:
+            step_fn = tracer.wrap_step(step_fn)
+    else:
+        # the Runtime facade owns jit/donation (and the traced-mpmd
+        # per-tick exception) for both schedule families
+        rt = Runtime(pplan, model, rc, tracer=tracer)
+        state = rt.init_state(model.init(key), batch_sds)
+        if tracer is not None and rc.execution == "mpmd":
             # the mpmd round runs T device-stream ticks, not one host
             # mark per compute event — map tick marks back onto the
             # per-event timeline
             tracer.set_tick_groups(device_stream_tick_groups(pplan))
-    else:
-        state = pipeline_stream.init_state(
-            model, key, batch_sds, mode=args.mode,
-            ticks_per_step=args.ticks, plan=pplan)
-        step_fn = pipeline_stream.make_train_step(
-            model, mode=args.mode, lr=args.lr, gamma=args.gamma,
-            clip=args.clip or None, ticks_per_step=args.ticks, plan=pplan)
-    # the traced mpmd step measures real per-tick wall time and jits
-    # each tick internally; an outer jit would swallow the host marks
-    if not (args.exec == "mpmd" and tracer is not None):
-        step_fn = jax.jit(step_fn, donate_argnums=0)
-    if tracer is not None:
-        if schedule == "stream":
+        if tracer is not None and schedule == "stream":
             # the fused tick step is not separable per stage -- probe
             # each stage's cost in isolation (PipeDream-style) for the
             # per-device attribution in the trace and drift report
             tracer.set_probed(probe_stage_costs(
                 model, state["params"]["stages"],
                 mb=max(1, args.batch // args.ticks), seq=args.seq))
-        step_fn = tracer.wrap_step(step_fn)
+        step_fn = rt.train_step
 
     start = 0
     if args.resume == "auto" and args.ckpt_dir:

@@ -702,6 +702,89 @@ class Model:
             full["layers"], caches)
         return self.logits(outer, x), {"layers": placed}
 
+    # ------------------------------------------------------- pipelined serve
+    def decode_embed(self, outer, tokens, pos):
+        """Embed decode tokens with per-position encodings.
+
+        ``tokens`` is [b, s] int32; ``pos`` is int32 *broadcastable to*
+        ``tokens.shape`` (the decode wave passes [R, 1] per-request
+        positions, a prefill lane [1, P] = ``arange(P)``).  Elementwise
+        this is exactly :meth:`decode_step`'s embed + sinusoidal term,
+        so pipelined serving stays bitwise-identical to whole-model
+        decoding."""
+        cfg = self.cfg
+        x = embed_apply(cfg, outer["embed"], tokens)
+        if cfg.pos_embed == "sinusoidal":
+            d = cfg.d_model
+            p = jnp.asarray(pos, jnp.float32)
+            ang = (p[..., None] /
+                   jnp.power(10000.0, jnp.arange(0, d, 2, jnp.float32) / d))
+            pe = jnp.zeros(p.shape + (d,), jnp.float32)
+            pe = pe.at[..., 0::2].set(jnp.sin(ang))
+            pe = pe.at[..., 1::2].set(jnp.cos(ang))
+            x = x + pe.astype(x.dtype)
+        return x
+
+    def stage_decode(self, stage_params, stage_cache, x, pos):
+        """One chunk-stage's single-token decode: x [b, 1, d], scalar
+        ``pos`` -> (x [b, 1, d], new stage cache).  ``stage_params`` is
+        one :meth:`partition_stage_params` chunk tree, ``stage_cache``
+        the matching slice of an :meth:`init_cache` tree.  Scanning the
+        stage's layers with :meth:`decode_step`'s per-layer bodies keeps
+        the per-(layer, token) op sequence — and therefore the emitted
+        tokens — bitwise-identical to whole-model decoding."""
+        cfg = self.cfg
+        if cfg.is_encdec or self.hybrid:
+            kind = "encoder-decoder" if cfg.is_encdec else "hybrid"
+            raise NotImplementedError(
+                f"stage_decode does not support {kind} models "
+                f"({cfg.name}): their decode state is not a per-layer "
+                f"scan (cross-attention / tied shared blocks); serve "
+                f"them with launch/serve.py's whole-model SimpleEngine")
+        layers = stage_params["layers"]
+        if cfg.ssm is not None:
+            def body(x, inp):
+                lp, st = inp
+                x, _, _, new_st = block_apply(cfg, lp, x, state=st)
+                return x, new_st
+            x, new_states = jax.lax.scan(
+                body, x, (layers, stage_cache["layers"]))
+            return x, {"layers": new_states}
+
+        def body(x, inp):
+            lp, lc = inp
+            x, _, new_c, _ = block_apply(cfg, lp, x, cache=lc, pos=pos)
+            return x, new_c
+        x, new_cache = jax.lax.scan(
+            body, x, (layers, stage_cache["layers"]))
+        return x, {"layers": new_cache}
+
+    def stage_prefill(self, stage_params, stage_cache, x_seq, n_valid):
+        """One chunk-stage's whole-prompt prefill in a single call:
+        x_seq [1, P, d] -> (y_seq [1, P, d], new stage cache).
+
+        Scans :meth:`stage_decode` over positions 0..P-1 inside one
+        XLA computation (one Python dispatch per *chunk*, not per
+        token); positions >= ``n_valid`` compute on padding but their
+        cache updates are masked out, so the final cache equals a
+        token-by-token prefill of exactly the first ``n_valid`` tokens
+        from ``stage_cache`` — pass a fresh init slice to keep a
+        recycled KV page from leaking its previous request's state."""
+        P = x_seq.shape[1]
+
+        def body(cache, i):
+            x = jax.lax.dynamic_slice_in_dim(x_seq, i, 1, 1)
+            y, new_c = self.stage_decode(stage_params, cache, x, i)
+            keep = i < n_valid
+            new_c = jax.tree.map(
+                lambda o, n: jnp.where(keep, n.astype(o.dtype), o),
+                cache, new_c)
+            return new_c, y
+
+        new_cache, ys = jax.lax.scan(
+            body, stage_cache, jnp.arange(P, dtype=jnp.int32))
+        return jnp.swapaxes(ys[:, :, 0, :], 0, 1), new_cache
+
 
 # ===========================================================================
 # cache logical axes (for decode-cell sharding)

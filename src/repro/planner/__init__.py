@@ -52,25 +52,33 @@ Quick start::
     print(p.summary())          # partition, s_fwd/s_bwd, bottleneck
 """
 from repro.planner.api import (PipelinePlan, ROUND_SCHEDULES, SCHEDULES,
-                               check_against_closed_forms, plan)
+                               ServePlan, check_against_closed_forms, plan,
+                               serve_plan)
 from repro.planner.partition import (Partition, dp_split,
                                      profile_stage_costs, uniform)
 from repro.planner.profiler import (LayerProfile, ModelProfile,
                                     profile_model, synthetic_profile)
 from repro.planner.schedule_ir import (DeviceStreams, Event, EventTable,
-                                       Schedule, compile_device_streams,
-                                       compile_event_table, emit, gpipe,
+                                       Schedule, ServeStreams, ServeTable,
+                                       compile_device_streams,
+                                       compile_event_table,
+                                       compile_serve_streams,
+                                       compile_serve_table, emit, gpipe,
                                        interleaved_1f1b, one_f_one_b,
                                        pipedream_2bw, round_compute_events,
                                        round_compute_program,
-                                       round_robin_1f1b, streaming)
+                                       round_robin_1f1b, serve_round_events,
+                                       streaming)
 from repro.planner.verify import (VerificationError, VerifyReport,
-                                  Violation, check_plan,
+                                  Violation, check_plan, check_serve_plan,
                                   verify_device_streams,
-                                  verify_event_table, verify_plan)
+                                  verify_event_table, verify_plan,
+                                  verify_request_trace,
+                                  verify_serve_streams, verify_serve_table)
 
 __all__ = [
     "PipelinePlan", "SCHEDULES", "ROUND_SCHEDULES", "plan",
+    "ServePlan", "serve_plan",
     "check_against_closed_forms",
     "Partition", "dp_split", "profile_stage_costs", "uniform",
     "LayerProfile", "ModelProfile", "profile_model", "synthetic_profile",
@@ -78,6 +86,10 @@ __all__ = [
     "one_f_one_b", "pipedream_2bw", "interleaved_1f1b",
     "EventTable", "compile_event_table", "round_compute_program",
     "DeviceStreams", "compile_device_streams", "round_compute_events",
+    "ServeTable", "ServeStreams", "serve_round_events",
+    "compile_serve_table", "compile_serve_streams",
     "VerificationError", "VerifyReport", "Violation", "check_plan",
     "verify_event_table", "verify_device_streams", "verify_plan",
+    "check_serve_plan", "verify_serve_table", "verify_serve_streams",
+    "verify_request_trace",
 ]

@@ -241,6 +241,130 @@ def plan(config=None, n_stages: int = 2, *, schedule: str = "1f1b_rr",
 ROUND_SCHEDULES = ir.ROUND_SCHEDULES
 
 
+@dataclass(frozen=True)
+class ServePlan:
+    """Everything the serving engine needs to execute one continuous-
+    batching layout: the stage partition plus the round geometry — how
+    many live decode slots (``n_slots``), how many prompts may be
+    admitted per round (``max_prefill``), the padded per-lane prompt
+    budget (``prompt_budget``) and the per-stage KV paging
+    (``n_pages`` pages of ``page_seq`` positions each; one page per
+    request per stage, so a request's total length is capped at
+    ``page_seq``).
+
+    Serving is forward-only and folds one chunk per device (the decode
+    state *is* the KV pages, which live with their chunk's weights), so
+    ``n_chunks == n_devices == n_stages``.
+    """
+    n_stages: int
+    partition: pt.Partition
+    n_slots: int
+    max_prefill: int
+    prompt_budget: int
+    n_pages: int
+    page_seq: int
+    schedule: str = "serve"
+    partitioner: str = "uniform"
+
+    @property
+    def n_chunks(self) -> int:
+        return self.n_stages
+
+    @property
+    def n_devices(self) -> int:
+        return self.n_stages
+
+    @property
+    def stage_ranges(self) -> Tuple[Tuple[int, int], ...]:
+        return self.partition.stages()
+
+    @property
+    def stage_sizes(self) -> Tuple[int, ...]:
+        return self.partition.sizes()
+
+    def serve_events(self):
+        """The round's staircase events ``(kind, lane, chunk, t)``."""
+        return ir.serve_round_events(self.n_chunks, self.max_prefill)
+
+    def serve_table(self) -> ir.ServeTable:
+        """Dense int32 lowering of one serving round — what the
+        ``lax.scan`` serving backend executes."""
+        return ir.compile_serve_table(self.serve_events(), self.n_chunks,
+                                      self.max_prefill)
+
+    def serve_streams(self) -> ir.ServeStreams:
+        """Per-device tick streams of one serving round — what the
+        shard_map MPMD serving backend runs."""
+        return ir.compile_serve_streams(
+            self.serve_events(), self.n_chunks, self.max_prefill,
+            self.n_devices)
+
+    def verify(self, *, device_streams: bool = True) -> None:
+        """Statically verify the serving round's compiled artifacts
+        (KV/hidden slot dataflow, one decode wave per round, staircase
+        encoding, cut-transfer matching — see ``planner/verify.py``).
+        Raises :class:`~repro.planner.verify.VerificationError`."""
+        from repro.planner import verify as pv
+        pv.check_serve_plan(self, device_streams=device_streams)
+
+    def summary(self) -> str:
+        return (f"serve_plan[x{self.n_stages} "
+                f"part={self.partitioner}:{self.partition.sizes()} "
+                f"slots={self.n_slots} prefill={self.max_prefill} "
+                f"P={self.prompt_budget} pages={self.n_pages}"
+                f"x{self.page_seq}]")
+
+
+def serve_plan(config=None, n_stages: int = 2, *, n_slots: int = 4,
+               max_prefill: int = 1, prompt_budget: int = 16,
+               n_pages: Optional[int] = None, page_seq: int = 64,
+               n_layers: Optional[int] = None,
+               partitioner: str = "uniform",
+               profile: Optional[pf.ModelProfile] = None,
+               profile_method: str = "analytic",
+               validate: bool = True) -> ServePlan:
+    """Build a :class:`ServePlan`.
+
+    ``config`` is an ``ArchConfig`` (profiled like :func:`plan` when
+    ``partitioner="dp"``), or None with bare ``n_layers`` (uniform
+    split).  ``n_pages`` defaults to ``n_slots`` (every live request
+    owns one page per stage); ``page_seq`` caps each request's
+    prompt + generation length and must cover ``prompt_budget``.
+    """
+    if n_slots < 1:
+        raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+    if max_prefill < 0:
+        raise ValueError(f"max_prefill must be >= 0, got {max_prefill}")
+    if prompt_budget < 1:
+        raise ValueError(f"prompt_budget must be >= 1, got {prompt_budget}")
+    if page_seq < prompt_budget:
+        raise ValueError(f"page_seq={page_seq} cannot hold a "
+                         f"prompt_budget={prompt_budget} prompt")
+    if n_pages is None:
+        n_pages = n_slots
+    if n_pages < n_slots:
+        raise ValueError(f"n_pages={n_pages} < n_slots={n_slots}: a live "
+                         f"request needs a page on every stage")
+    if profile is None:
+        if config is not None:
+            profile = pf.profile_model(config, method=profile_method,
+                                       batch=n_slots, seq=page_seq)
+        else:
+            L = n_layers if n_layers is not None else n_stages
+            profile = pf.synthetic_profile([1.0] * L)
+    if profile.n_layers < n_stages:
+        raise ValueError(f"{profile.n_layers} layers cannot fill "
+                         f"{n_stages} stages")
+    part = pt.partition_profile(profile, n_stages, method=partitioner)
+    splan = ServePlan(
+        n_stages=n_stages, partition=part, n_slots=n_slots,
+        max_prefill=max_prefill, prompt_budget=prompt_budget,
+        n_pages=n_pages, page_seq=page_seq, partitioner=partitioner)
+    if validate:
+        splan.verify()
+    return splan
+
+
 def check_against_closed_forms(p: PipelinePlan) -> None:
     """Assert IR-derived staleness equals ``core/spectrain.py``'s closed
     forms — the property this subsystem exists to make checkable."""

@@ -109,8 +109,8 @@ def reshard_params(params: Dict[str, Any], *, new_pipe: int,
 def elastic_restate(model_old, model_new, state: Dict[str, Any],
                     batch_sds, *, mode: str = "spectrain",
                     ticks_per_step: int = 1, plan=None,
-                    registry=None, exec: str = "spmd",
-                    mesh=None) -> Dict[str, Any]:
+                    registry=None, execution: Optional[str] = None,
+                    mesh=None, **legacy) -> Dict[str, Any]:
     """Full state transition between two Model instances (new mesh plan).
 
     ``plan``: optional ``repro.planner.PipelinePlan`` for the *new*
@@ -125,7 +125,7 @@ def elastic_restate(model_old, model_new, state: Dict[str, Any],
     (uniform, remainder-first) partition is used — ragged layer counts
     restate fine; the only hard error is a stage that would be empty.
 
-    ``exec`` / ``mesh``: execution backend for the *new* IR state —
+    ``execution`` / ``mesh``: execution backend for the *new* IR state —
     ``"mpmd"`` packs the repartitioned weights and momentum into the
     stage-local layout and places them on the pipe mesh (see
     ``pipeline_stream.make_ir_state``); a packed *input* state is
@@ -137,13 +137,15 @@ def elastic_restate(model_old, model_new, state: Dict[str, Any],
     schedule, carried step).
     """
     from repro.core import pipeline_stream
+    execution = pipeline_stream._resolve_execution(
+        execution, legacy, "elastic_restate")
     if "chunk_sizes" in state:
         state = unpack_mpmd_state(state)
     ir_plan = plan is not None and \
         plan.schedule in pipeline_stream.IR_SCHEDULES
-    if exec != "spmd" and not ir_plan:
+    if execution != "spmd" and not ir_plan:
         raise ValueError(
-            f"exec={exec!r} needs an IR-schedule plan "
+            f"execution={execution!r} needs an IR-schedule plan "
             f"({pipeline_stream.IR_SCHEDULES})")
     if plan is not None:
         sizes: Any = plan.partition.sizes()
@@ -154,7 +156,7 @@ def elastic_restate(model_old, model_new, state: Dict[str, Any],
     if ir_plan:
         new_state = pipeline_stream.make_ir_state(
             model_new, params, batch_sds, plan=plan, mode=mode,
-            exec=exec, mesh=mesh)
+            execution=execution, mesh=mesh)
     else:
         new_state = pipeline_stream.make_state(
             model_new, params, batch_sds, mode=mode,
@@ -165,7 +167,7 @@ def elastic_restate(model_old, model_new, state: Dict[str, Any],
     mom_stages = reshard_params(
         {"stages": state["momentum"]["stages"]},
         new_pipe=model_new.n_stages, sizes=sizes)["stages"]
-    if ir_plan and exec == "mpmd":
+    if ir_plan and execution == "mpmd":
         # the packed backend mirrors the packed param layout (and its
         # placement) for the carried momentum
         packed_mom, _ = pack_chunk_params(
@@ -190,5 +192,5 @@ def elastic_restate(model_old, model_new, state: Dict[str, Any],
             "elastic_restate",
             old_pipe=model_old.n_stages, new_pipe=model_new.n_stages,
             schedule=(plan.schedule if plan is not None else "stream"),
-            exec=exec, step=int(state["step"]))
+            execution=execution, step=int(state["step"]))
     return new_state

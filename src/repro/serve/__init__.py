@@ -1,0 +1,31 @@
+"""Continuous-batching inference on the pipelined runtime.
+
+Serving is a first-class pipelined workload here, not a sidecar loop:
+a serving *round* (one batched decode wave + up to ``max_prefill``
+freshly admitted prompts) compiles through ``planner/schedule_ir`` to
+the same dense int32 artifacts the training interpreters execute — a
+:class:`~repro.planner.schedule_ir.ServeTable` for the SPMD
+``lax.scan`` backend and per-device
+:class:`~repro.planner.schedule_ir.ServeStreams` for the MPMD
+``shard_map`` backend — verified by ``planner/verify`` before they run.
+
+  ``trace``      seeded Poisson arrival traces (:func:`poisson_trace`)
+                 and the :class:`Request` record.
+  ``scheduler``  :class:`ContinuousBatcher` — FIFO admission over
+                 request slots and per-stage KV pages, eviction at
+                 ``gen_len``, and a verifiable admit/decode/evict
+                 event log (``planner.verify.verify_request_trace``).
+  ``engine``     :class:`ServeEngine` (the pipelined engine, scan and
+                 mpmd backends, bitwise-identical tokens) and
+                 :class:`SimpleEngine` (whole-model token-by-token
+                 reference; the fallback for hybrid/enc-dec archs the
+                 staged decode path gates out).
+
+See docs/SERVING.md for the request lifecycle and KV-page layout.
+"""
+from repro.serve.engine import ServeEngine, SimpleEngine
+from repro.serve.scheduler import ContinuousBatcher, admissible
+from repro.serve.trace import Request, poisson_trace
+
+__all__ = ["ServeEngine", "SimpleEngine", "ContinuousBatcher",
+           "admissible", "Request", "poisson_trace"]

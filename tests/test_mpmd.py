@@ -1,6 +1,6 @@
 """True MPMD execution: stage-local weights, bitwise-identical training.
 
-Three layers of evidence for ``exec="mpmd"`` in
+Three layers of evidence for ``execution="mpmd"`` in
 ``core/pipeline_stream.make_ir_train_step``:
 
   * **Device streams** — lowering the round event table to per-device
@@ -49,9 +49,9 @@ def _run(exec_, p, mode, steps=2, lr=0.05):
     batch = lm_batch(jax.random.PRNGKey(1), cfg,
                      batch=2 * p.round_microbatches, seq=8)
     state = pipeline_stream.make_ir_state(m, params, None, plan=p,
-                                          mode=mode, exec=exec_)
+                                          mode=mode, execution=exec_)
     step = jax.jit(pipeline_stream.make_ir_train_step(
-        m, plan=p, mode=mode, lr=lr, exec=exec_))
+        m, plan=p, mode=mode, lr=lr, execution=exec_))
     losses = []
     for _ in range(steps):
         state, met = step(state, batch)
@@ -195,9 +195,9 @@ class TestMpmdBitIdentity:
         tracer.set_tick_groups(device_stream_tick_groups(p))
         state = pipeline_stream.make_ir_state(m, params, None, plan=p,
                                               mode="spectrain",
-                                              exec="mpmd")
+                                              execution="mpmd")
         step = tracer.wrap_step(pipeline_stream.make_ir_train_step(
-            m, plan=p, mode="spectrain", lr=0.05, exec="mpmd",
+            m, plan=p, mode="spectrain", lr=0.05, execution="mpmd",
             tracer=tracer))
         losses = []
         for _ in range(2):
@@ -208,7 +208,7 @@ class TestMpmdBitIdentity:
         for a, b in zip(losses, lm):
             assert a.tobytes() == b.tobytes(), (a, b)
         bad = jax.jit(pipeline_stream.make_ir_train_step(
-            m, plan=p, mode="spectrain", lr=0.05, exec="mpmd",
+            m, plan=p, mode="spectrain", lr=0.05, execution="mpmd",
             tracer=tracer))
         with pytest.raises(ValueError, match="outer jax.jit"):
             bad(state, batch)
@@ -226,17 +226,17 @@ class TestMpmdGates:
 
     def test_unknown_exec_rejected(self):
         p = _mk_plan("1f1b", 1, partitioner="uniform")
-        with pytest.raises(ValueError, match="exec"):
+        with pytest.raises(ValueError, match="execution"):
             pipeline_stream.make_ir_train_step(
                 self._model(), plan=p, mode="spectrain", lr=0.05,
-                exec="simd")
+                execution="simd")
 
     def test_clip_not_supported(self):
         p = _mk_plan("1f1b", 1, partitioner="uniform")
         with pytest.raises(NotImplementedError, match="clip"):
             pipeline_stream.make_ir_train_step(
                 self._model(), plan=p, mode="spectrain", lr=0.05,
-                exec="mpmd", clip=1.0)
+                execution="mpmd", clip=1.0)
 
     def test_mesh_must_match_plan(self):
         from jax.sharding import Mesh
@@ -245,7 +245,7 @@ class TestMpmdGates:
         with pytest.raises(ValueError, match="pipe"):
             pipeline_stream.make_ir_train_step(
                 self._model(), plan=p, mode="spectrain", lr=0.05,
-                exec="mpmd", mesh=mesh)
+                execution="mpmd", mesh=mesh)
 
     def test_stage_submeshes_raises_without_pipe(self):
         from jax.sharding import Mesh
@@ -267,14 +267,14 @@ class TestCLIExecFlag:
             "--arch", "granite-8b", "--smoke", "--pipe", "1",
             "--layers", "4", "--steps", "2", "--batch", "8",
             "--seq", "16", "--log-every", "1",
-            "--schedule", "1f1b", "--exec", "mpmd"])
+            "--schedule", "1f1b", "--execution", "mpmd"])
         assert rc == 0
 
     def test_mpmd_rejects_stream_and_clip(self):
         from repro.launch import train
         with pytest.raises(SystemExit):
             train.main(["--smoke", "--schedule", "stream",
-                        "--exec", "mpmd"])
+                        "--execution", "mpmd"])
         with pytest.raises(SystemExit):
             train.main(["--smoke", "--schedule", "1f1b", "--pipe", "1",
-                        "--exec", "mpmd", "--clip", "1.0"])
+                        "--execution", "mpmd", "--clip", "1.0"])

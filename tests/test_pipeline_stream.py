@@ -180,25 +180,25 @@ class TestUnsupportedGateMessages:
         if which == "mpmd-clip":
             m = Model(tiny_cfg("granite-8b", n_layers=4, pipe=2))
             return lambda: pipeline_stream.make_ir_train_step(
-                m, plan=p, mode="spectrain", lr=0.05, exec="mpmd",
+                m, plan=p, mode="spectrain", lr=0.05, execution="mpmd",
                 clip=1.0)
         if which == "mpmd-hybrid-step":
             m = Model(tiny_cfg("zamba2-1.2b", n_layers=4, pipe=2))
             assert m.hybrid
             return lambda: pipeline_stream.make_ir_train_step(
-                m, plan=p, mode="spectrain", lr=0.05, exec="mpmd")
+                m, plan=p, mode="spectrain", lr=0.05, execution="mpmd")
         assert which == "mpmd-hybrid-state"
         m = Model(tiny_cfg("zamba2-1.2b", n_layers=4, pipe=2))
         assert m.hybrid
         return lambda: pipeline_stream.make_ir_state(
             m, m.init(jax.random.PRNGKey(0)), None, plan=p,
-            exec="mpmd")
+            execution="mpmd")
 
     @pytest.mark.parametrize("which,names", [
         ("stash-depth", ["weight-stash depth 3", "1f1b, gpipe"]),
-        ("mpmd-clip", ["clip_by_global_norm", "exec='spmd'"]),
-        ("mpmd-hybrid-step", ["hybrid SSM/attention", "exec='spmd'"]),
-        ("mpmd-hybrid-state", ["hybrid SSM/attention", "exec='spmd'"]),
+        ("mpmd-clip", ["clip_by_global_norm", "execution='spmd'"]),
+        ("mpmd-hybrid-step", ["hybrid SSM/attention", "execution='spmd'"]),
+        ("mpmd-hybrid-state", ["hybrid SSM/attention", "execution='spmd'"]),
     ])
     def test_gate_message_is_structured(self, which, names):
         with pytest.raises(NotImplementedError) as e:

@@ -184,7 +184,7 @@ class TestMpmdPlacement:
         m = Model(cfg)
         state = pipeline_stream.make_ir_state(
             m, m.init(jax.random.PRNGKey(0)), None, plan=p, mode=mode,
-            exec="mpmd")
+            execution="mpmd")
         return m, p, cfg, state
 
     def test_uniform_plan_params_one_s_th_per_device(self):
@@ -260,6 +260,6 @@ class TestMpmdPlacement:
         batch = lm_batch(jax.random.PRNGKey(1), cfg,
                          batch=2 * p.round_microbatches, seq=8)
         step = jax.jit(pipeline_stream.make_ir_train_step(
-            m, plan=p, mode="spectrain", lr=0.05, exec="mpmd"))
+            m, plan=p, mode="spectrain", lr=0.05, execution="mpmd"))
         state, _ = step(state, batch)
         _assert_chunks_stage_local(state, S)

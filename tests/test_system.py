@@ -89,6 +89,8 @@ class TestDrivers:
 
     def test_serve_driver(self):
         out = self._run("repro.launch.serve", [
-            "--arch", "granite-8b", "--batch", "2", "--prompt-len", "8",
-            "--gen", "8"])
+            "--arch", "granite-8b", "--pipe", "2", "--layers", "4",
+            "--requests", "4", "--prompt-lens", "2,8",
+            "--gen-lens", "1,4"])
         assert "decode:" in out
+        assert "engine=pipelined" in out

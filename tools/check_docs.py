@@ -36,6 +36,7 @@ DEFAULT_DOCS = [
     "docs/ARCHITECTURE.md",
     "docs/SCHEDULES.md",
     "docs/OBSERVABILITY.md",
+    "docs/SERVING.md",
 ]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")

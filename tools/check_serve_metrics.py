@@ -1,0 +1,120 @@
+#!/usr/bin/env python
+"""Schema check for the serving driver's ``--metrics-out`` JSONL.
+
+Used by the CI ``serve-smoke`` job; dependency-free on purpose (no
+jax import) so it runs anywhere:
+
+    python tools/check_serve_metrics.py serve_spmd.jsonl [more.jsonl...]
+
+Per file it asserts:
+
+  * every line is a JSON object with ``event`` and ``t`` fields;
+  * exactly one ``serve_run`` summary exists, its accounting closes
+    (``n_served + n_rejected == n_requests``) and its throughput /
+    latency fields are finite non-negative numbers;
+  * the scheduler log (``serve_sched``) is well-formed — known ``ev``
+    kinds, integer ``round``/``rid`` — and every admitted request is
+    eventually evicted (request lifecycle closes);
+  * one final ``summary`` record (the registry flush) is present.
+
+Exit code 0 = clean, 1 = problems (listed on stderr).
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+SCHED_EVS = {"admit", "decode", "evict", "reject"}
+RUN_NUM_FIELDS = ("wall_s", "compile_s", "tok_per_s",
+                  "token_ms_p50", "token_ms_p99")
+
+
+def check_file(path: str, problems: list) -> None:
+    records = []
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except ValueError as e:
+                problems.append(f"{path}:{i}: not JSON: {e}")
+                continue
+            if not isinstance(rec, dict) or "event" not in rec \
+                    or "t" not in rec:
+                problems.append(f"{path}:{i}: missing event/t fields")
+                continue
+            records.append(rec)
+
+    runs = [r for r in records if r["event"] == "serve_run"]
+    if len(runs) != 1:
+        problems.append(f"{path}: expected exactly 1 serve_run record, "
+                        f"found {len(runs)}")
+    for run in runs:
+        for k in RUN_NUM_FIELDS:
+            v = run.get(k)
+            if not isinstance(v, (int, float)) or not math.isfinite(v) \
+                    or v < 0:
+                problems.append(f"{path}: serve_run.{k} is not a "
+                                f"finite non-negative number: {v!r}")
+        ns, nr, nq = (run.get(k) for k in
+                      ("n_served", "n_rejected", "n_requests"))
+        if not all(isinstance(v, int) for v in (ns, nr, nq)) \
+                or ns + nr != nq:
+            problems.append(f"{path}: serve_run accounting does not "
+                            f"close: served={ns} rejected={nr} "
+                            f"requests={nq}")
+
+    admitted, evicted = set(), set()
+    for r in records:
+        if r["event"] != "serve_sched":
+            continue
+        ev = r.get("ev")
+        if ev not in SCHED_EVS:
+            problems.append(f"{path}: unknown serve_sched ev {ev!r}")
+            continue
+        if not isinstance(r.get("round"), int) \
+                or not isinstance(r.get("rid"), int):
+            problems.append(f"{path}: serve_sched {ev} lacks integer "
+                            f"round/rid: {r}")
+            continue
+        if ev == "admit":
+            admitted.add(r["rid"])
+        elif ev == "evict":
+            evicted.add(r["rid"])
+    leaked = admitted - evicted
+    if leaked:
+        problems.append(f"{path}: admitted but never evicted "
+                        f"(slot/page leak): rids {sorted(leaked)}")
+    if runs and not admitted and runs[0].get("n_served"):
+        problems.append(f"{path}: serve_run reports served requests "
+                        f"but no serve_sched admit events")
+
+    if not any(r["event"] == "summary" for r in records):
+        problems.append(f"{path}: missing final summary record "
+                        f"(registry close() flush)")
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv is not None else sys.argv[1:])
+    if not paths:
+        print("usage: check_serve_metrics.py FILE.jsonl [...]",
+              file=sys.stderr)
+        return 2
+    problems: list = []
+    for p in paths:
+        try:
+            check_file(p, problems)
+        except OSError as e:
+            problems.append(f"{p}: {e}")
+    for p in problems:
+        print(p, file=sys.stderr)
+    print(f"checked {len(paths)} metrics file(s): "
+          f"{'OK' if not problems else f'{len(problems)} problem(s)'}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
